@@ -1,0 +1,24 @@
+"""Fig. 6: robustness to the mixing hyper-parameter alpha."""
+from benchmarks.common import Scale, print_csv, record, simulate, std_argparser
+
+ALPHAS = [0.2, 0.6, 0.9]
+
+
+def run(scale: Scale):
+    rows = []
+    for iid in (True, False):
+        for a in ALPHAS:
+            r = simulate(scale, "tea", iid=iid, alpha=a)
+            r["kw"]["alpha"] = a
+            rows.append(r)
+    record("fig6_alpha", rows)
+    return rows
+
+
+def main():
+    args = std_argparser(__doc__).parse_args()
+    print_csv("fig6_alpha", run(Scale(args.full)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Minimal msgpack pytree checkpointing (no orbax in this container)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, jnp.ndarray)):
+        arr = np.asarray(obj)
+        return {b"__nd__": True, b"dtype": arr.dtype.str,
+                b"shape": list(arr.shape), b"data": arr.tobytes()}
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(b"__nd__"):
+        return np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"])
+                             ).reshape(obj[b"shape"]).copy()
+    return obj
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_encode(np.asarray(l)) for l in flat],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, default=_encode, use_bin_type=True))
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_decode, raw=True)
+    leaves = [_decode(l) for l in payload[b"leaves"]]
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    assert len(flat) == len(leaves), "checkpoint/pytree structure mismatch"
+    restored = [jnp.asarray(l).astype(f.dtype).reshape(f.shape)
+                for l, f in zip(leaves, flat)]
+    return jax.tree_util.tree_unflatten(treedef, restored)

@@ -1,0 +1,7 @@
+from repro.core.compression import (compress_pytree, decompress_pytree,
+                                    pytree_dense_bytes, pytree_wire_bytes,
+                                    roundtrip_pytree, sparsify_quantize_dense)
+from repro.core.dynamic import CompressionSchedule, greedy_search, make_schedule
+from repro.core.server import ServerConfig, TeasqServer
+from repro.core.staleness import (aggregate_cache, merge_global, mixing_alpha,
+                                  staleness_weight, weighted_average)

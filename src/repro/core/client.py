@@ -1,0 +1,48 @@
+"""Device-side local update (paper Alg. 1 device process, Eq. 5).
+
+E local epochs of minibatch SGD on
+    f_k(w; x) + (mu/2) ||w - w^t||^2
+where w^t is the (decompressed) global model pulled from the server.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "lr", "mu"))
+def _prox_sgd_step(params: Any, anchor: Any, batch: Dict[str, jax.Array],
+                   loss_fn: Callable, lr: float, mu: float
+                   ) -> Tuple[Any, jax.Array]:
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+    def upd(p, g, a):
+        return p - lr * (g + mu * (p - a))
+
+    return jax.tree.map(upd, params, grads, anchor), loss
+
+
+def local_update(w_global: Any, data_x: np.ndarray, data_y: np.ndarray,
+                 loss_fn: Callable, *, epochs: int, batch_size: int,
+                 lr: float, mu: float, rng: np.random.RandomState
+                 ) -> Tuple[Any, float, int]:
+    """Run E epochs of prox-SGD from w_global. Returns (w_local, last_loss,
+    n_steps). ``loss_fn(params, batch)`` is the task loss."""
+    params = w_global
+    n = len(data_y)
+    steps = 0
+    loss = float("nan")
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - batch_size + 1, batch_size):
+            sel = order[s:s + batch_size]
+            batch = {"images": jnp.asarray(data_x[sel]),
+                     "labels": jnp.asarray(data_y[sel])}
+            params, l = _prox_sgd_step(params, w_global, batch, loss_fn, lr, mu)
+            loss = float(l)
+            steps += 1
+    return params, loss, steps

@@ -1,0 +1,285 @@
+"""TEASQ-Fed as a first-class mesh feature: one jit-able federated round.
+
+Datacenter mapping of the protocol (DESIGN.md §3b): the mesh's fed axes
+(``data`` [+ ``pod``]) are partitioned into G federated groups; one round is
+
+  1. every group runs E prox-SGD local steps from the global params on its
+     own microbatches (Eq. 5);
+  2. each group's model delta is compressed in-graph with the paper's
+     Top-K (block-threshold) + QSGD operator;
+  3. deltas are exchanged and combined with the staleness weights of
+     Eqs. 6-10 to form the new global params.
+
+Step 3 has three collective schedules (the §Perf hillclimb lever):
+
+  * ``gather_q``  — paper-faithful: all-gather the *quantized int8* deltas
+    over the fed axes + local dequant/weighted-sum (matches the FL star
+    topology where the server receives K compressed models). Wire bytes
+    = G * |params|/4 per device (sparsity savings are additionally real on
+    a packed wire; in dense HLO layout they are reported analytically).
+  * ``gather_f32`` — TEA-Fed (no compression) baseline: f32 all-gather.
+  * ``psum``       — beyond-paper: pre-weighted dense reduce (ring
+    all-reduce, 2*|params| bytes) — cheaper than any gather at G >= 8 but
+    requires a reduction network, which the paper's wireless setting lacks.
+
+Without an active mesh the same code runs unsharded (vmap over groups) so
+CPU tests can verify all schedules agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.staleness import mixing_alpha, staleness_weight
+from repro.sharding.rules import Rules, active_rules, logical_axes_for
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_groups: int = 8             # G (must equal prod(fed mesh axes) on mesh)
+    local_steps: int = 1          # E
+    lr: float = 1e-3
+    mu: float = 0.01              # prox weight (Eq. 5)
+    alpha: float = 0.6            # mixing (Eq. 9)
+    a: float = 0.5                # staleness exponent (Eq. 6)
+    p_s: float = 0.25             # sparsification keep-ratio
+    p_q: int = 8                  # quantization bits (8 -> int8 wire dtype)
+    schedule: str = "gather_q"    # gather_q | gather_f32 | psum
+    threshold_iters: int = 12
+    # within-group parallelism: "tp" (Megatron tensor parallel) or "dp"
+    # (replicate weights, split the group batch over the model axis — wins
+    # when the model fits per-chip; see EXPERIMENTS.md §Perf pair C)
+    group_parallelism: str = "tp"
+
+
+# ----------------------------------------------------------------------
+# in-graph compression primitives (TPU-adapted: no sort)
+# ----------------------------------------------------------------------
+def approx_topk_threshold(absx: jax.Array, p_s: float, iters: int) -> jax.Array:
+    """Binary-search the magnitude threshold keeping ~p_s of entries.
+    O(iters * n) elementwise — the TPU-native replacement for global sort."""
+    lo = jnp.zeros((), jnp.float32)
+    hi = jnp.max(absx).astype(jnp.float32) + 1e-12
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        frac = jnp.mean((absx >= mid).astype(jnp.float32))
+        return jnp.where(frac > p_s, mid, lo), jnp.where(frac > p_s, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def compress_delta(x: jax.Array, fed: FedConfig) -> Tuple[jax.Array, jax.Array]:
+    """-> (intN levels with zeros below threshold, f32 scale).
+    p_q <= 4 uses the packed s4 wire dtype (half the int8 bytes)."""
+    absx = jnp.abs(x.astype(jnp.float32))
+    thr = approx_topk_threshold(absx, fed.p_s, fed.threshold_iters)
+    mask = absx >= thr
+    kept = jnp.where(mask, x.astype(jnp.float32), 0.0)
+    L = 2 ** (fed.p_q - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(kept)), 1e-12)
+    wire_dtype = jnp.int4 if fed.p_q <= 4 else jnp.int8
+    levels = jnp.clip(jnp.round(kept / scale * L), -L, L).astype(wire_dtype)
+    return levels, scale
+
+
+def decompress_delta(levels: jax.Array, scale: jax.Array, fed: FedConfig,
+                     dtype) -> jax.Array:
+    L = 2 ** (fed.p_q - 1) - 1
+    return (levels.astype(jnp.float32) * scale / L).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+def _group_local_train(w0: Any, batches: Any, loss_fn: Callable,
+                       fed: FedConfig) -> Tuple[Any, jax.Array]:
+    """E prox-SGD steps for ONE group. batches: leaves (E, mb, ...)."""
+
+    def step(w, mb):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb))(w)
+        w = jax.tree.map(
+            lambda p, g, a0: (p - fed.lr * (g + fed.mu * (p - a0))).astype(p.dtype),
+            w, grads, w0)
+        return w, loss
+
+    w_final, losses = jax.lax.scan(step, w0, batches)
+    return w_final, losses.mean()
+
+
+def _fed_axes(rules: Optional[Rules]) -> Tuple[str, ...]:
+    if rules is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in rules.mesh.axis_names)
+
+
+def fed_wire_bytes(params: Any, fed: FedConfig, n_groups: int) -> Dict[str, float]:
+    """Analytic wire accounting (per round, whole system) for EXPERIMENTS.md."""
+    n = sum(x.size for x in jax.tree.leaves(params))
+    dense_f32 = 4.0 * n * n_groups
+    idx_bits = math.ceil(math.log2(max(n, 2)))
+    packed = n_groups * (fed.p_s * n * (fed.p_q + idx_bits)) / 8.0
+    dense_q = n_groups * n * fed.p_q / 8.0
+    return {"dense_f32": dense_f32, "dense_quant": dense_q,
+            "packed_sparse_quant": packed,
+            "compression_x": dense_f32 / packed}
+
+
+def make_fed_train_step(loss_fn: Callable, fed: FedConfig
+                        ) -> Callable:
+    """Build fed_round(params, batch, staleness) -> (params', metrics).
+
+    ``loss_fn(params, batch) -> scalar``.  ``batch`` leaves are (B, ...) with
+    B divisible by n_groups * local_steps; ``staleness`` is (G,) int32.
+    """
+
+    def fed_round(params, batch, staleness):
+        rules = active_rules()
+        G, E = fed.n_groups, fed.local_steps
+
+        def split(x):  # (B, ...) -> (G, E, B/(G*E), ...)
+            return x.reshape((G, E, x.shape[0] // (G * E)) + x.shape[1:])
+
+        gbatch = jax.tree.map(split, batch)
+
+        # Inside the group-local region, ``batch``/``seq`` constraints must
+        # NOT claim the fed axes (they belong to the group dim) — otherwise
+        # GSPMD bounces activations between conflicting shardings
+        # ("involuntary full rematerialization").  §Perf iteration 1.
+        from repro.sharding.rules import use_rules
+        if rules is None:
+            local_rules = None
+            fed_axes = ()
+        elif fed.group_parallelism == "dp":
+            # replicate weights over 'model'; split the group batch over it
+            local_rules = rules.with_overrides(
+                batch="model", seq=None, heads=None, kv_heads=None,
+                ffn=None, vocab=None, experts=None, ssm_heads=None)
+            fed_axes = _fed_axes(rules)
+        else:
+            local_rules = rules.with_overrides(batch=None, seq=None)
+            fed_axes = _fed_axes(rules)
+
+        # broadcast params to groups; shard group axis over the fed axes
+        def bcast(path, x):
+            y = jnp.broadcast_to(x[None], (G,) + x.shape)
+            if local_rules is not None:
+                keys = "/".join(str(getattr(p, "key", getattr(p, "idx", "")))
+                                for p in path)
+                logical = ("fed_group",) + logical_axes_for(keys, x.ndim)
+                y = jax.lax.with_sharding_constraint(
+                    y, local_rules.sharding(logical, y.shape))
+            return y
+
+        w_groups = jax.tree_util.tree_map_with_path(bcast, params)
+        if rules is not None:
+            # gbatch leaves: (G, E, b, ...) — in dp mode the per-group batch
+            # dim (2) shards over 'model'
+            bspec = (("fed_group", None, "batch")
+                     if fed.group_parallelism == "dp" else ("fed_group",))
+            gbatch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, local_rules.sharding(
+                        bspec + (None,) * (x.ndim - len(bspec)), x.shape)),
+                gbatch)
+        vmap_kw = {}
+        if fed_axes:
+            # shard the vmapped group dim over the fed axes inside any inner
+            # shard_map (the MoE expert-parallel block)
+            vmap_kw["spmd_axis_name"] = fed_axes
+        with use_rules(local_rules):
+            w_local, losses = jax.vmap(
+                lambda w, b: _group_local_train(w, b, loss_fn, fed),
+                **vmap_kw)(w_groups, gbatch)
+
+        # 2. per-group compressed deltas
+        delta = jax.tree.map(lambda wl, w0: wl - w0[None], w_local, params)
+        wts = staleness_weight(staleness, fed.a)          # (G,)
+        wts = wts / jnp.sum(wts)
+        a_t = mixing_alpha(staleness, fed.alpha, fed.a)
+
+        # 3. exchange + staleness-weighted combine
+        if rules is not None and fed.schedule.startswith("gather") \
+                and _fed_axes(rules):
+            # paper's star-topology wire pattern: explicit all-gather of the
+            # (quantized) per-group deltas over the fed axes.
+            new_params = _force_gather(delta, params, wts, a_t, fed, rules)
+        elif fed.schedule == "gather_q":
+            def combine(d, w0):
+                cvm = jax.vmap(lambda x: compress_delta(x, fed))
+                levels, scales = cvm(d.reshape(G, -1))
+                dq = jax.vmap(lambda l, s: decompress_delta(l, s, fed,
+                                                            jnp.float32))(
+                    levels, scales)
+                u = jnp.einsum("gn,g->n", dq, wts).reshape(w0.shape)
+                return (w0 + a_t * u).astype(w0.dtype)
+            new_params = jax.tree.map(combine, delta, params)
+        else:  # psum / gather_f32 without mesh: dense weighted reduce
+            def combine(d, w0):
+                u = jnp.einsum("g...,g->...", d.astype(jnp.float32), wts)
+                return (w0 + a_t * u).astype(w0.dtype)
+            new_params = jax.tree.map(combine, delta, params)
+        metrics = {"local_loss": losses.mean(),
+                   "alpha_t": a_t,
+                   "delta_norm": _tree_norm(delta)}
+        return new_params, metrics
+
+    return fed_round
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _force_gather(delta, params, wts, a_t, fed: FedConfig,
+                  rules: Rules):
+    """Recompute the combine inside shard_map with an explicit all_gather of
+    the (optionally quantized) per-group deltas over the fed axes, so the
+    compiled collective schedule matches the FL star topology."""
+    mesh = rules.mesh
+    fed_axes = _fed_axes(rules)
+    G = fed.n_groups
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(delta)
+    new_flat = []
+    for path, d in flat:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        logical = logical_axes_for(keys, d.ndim - 1)
+        pspec = rules.spec(logical, d.shape[1:])
+        in_spec = P(fed_axes, *pspec)
+        w0 = None
+        for p2, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            k2 = "/".join(str(getattr(q, "key", getattr(q, "idx", ""))) for q in p2)
+            if k2 == keys:
+                w0 = leaf
+                break
+
+        quant = fed.schedule == "gather_q"
+
+        def body(d_loc, w0_loc, wts_r, a_t_r, _quant=quant):
+            # d_loc: (G/|fed|, shard...) ; gather the group axis
+            if _quant:
+                lv, sc = jax.vmap(lambda x: compress_delta(x, fed))(
+                    d_loc.reshape(d_loc.shape[0], -1))
+                lv = jax.lax.all_gather(lv, fed_axes, axis=0, tiled=True)
+                sc = jax.lax.all_gather(sc, fed_axes, axis=0, tiled=True)
+                dq = jax.vmap(lambda l, s: decompress_delta(l, s, fed,
+                                                            jnp.float32))(lv, sc)
+            else:
+                dq = jax.lax.all_gather(d_loc, fed_axes, axis=0, tiled=True)
+                dq = dq.reshape(G, -1).astype(jnp.float32)
+            u = jnp.einsum("gn,g->n", dq, wts_r).reshape(w0_loc.shape)
+            return (w0_loc + a_t_r * u).astype(w0_loc.dtype)
+
+        out = jax.shard_map(body, mesh=mesh,
+                            in_specs=(in_spec, pspec, P(), P()),
+                            out_specs=pspec, check_vma=False)(d, w0, wts, a_t)
+        new_flat.append(out)
+    return jax.tree_util.tree_unflatten(treedef, [x for x in new_flat])

@@ -1,0 +1,63 @@
+"""Server-side TEASQ-Fed state machine (paper Algs. 1-2, server process).
+
+Distributor: admission-controls task requests with the C-fraction gate.
+Receiver/Updater: caches K = ceil(N*gamma) updates, then performs the
+staleness-weighted aggregation of Eqs. 6-10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, List, Optional, Tuple
+
+from repro.core.staleness import aggregate_cache
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    n_devices: int
+    c_fraction: float = 0.1     # C: max fraction of devices training in parallel
+    gamma: float = 0.1          # cache fraction: K = ceil(N * gamma)
+    alpha: float = 0.6          # mixing hyper-parameter (Eq. 9)
+    a: float = 0.5              # staleness exponent (Eq. 6)
+
+    @property
+    def max_parallel(self) -> int:
+        return max(1, math.ceil(self.n_devices * self.c_fraction))
+
+    @property
+    def cache_size(self) -> int:
+        return max(1, math.ceil(self.n_devices * self.gamma))
+
+
+class TeasqServer:
+    """Holds the global model, round counter t, active count P and cache Q."""
+
+    def __init__(self, w_init: Any, cfg: ServerConfig):
+        self.cfg = cfg
+        self.w = w_init
+        self.t = 0
+        self.active = 0                      # P
+        self.cache: List[Tuple[Any, int, int]] = []   # (w_local, h_c, n_c)
+
+    # -- Distributor (Alg. 1 server) ------------------------------------
+    def try_dispatch(self) -> Optional[Tuple[Any, int]]:
+        """Admit a task request: returns (w^t, t) or None if P >= ceil(N*C)."""
+        if self.active >= self.cfg.max_parallel:
+            return None
+        self.active += 1
+        return self.w, self.t
+
+    # -- Receiver + Updater (Alg. 2) ------------------------------------
+    def receive(self, w_local: Any, h: int, n_samples: int) -> bool:
+        """Push an update; aggregate when the cache reaches K.
+        Returns True if an aggregation round completed."""
+        self.active = max(0, self.active - 1)
+        self.cache.append((w_local, h, n_samples))
+        if len(self.cache) < self.cfg.cache_size:
+            return False
+        self.w = aggregate_cache(self.w, self.cache, self.t,
+                                 self.cfg.alpha, self.cfg.a)
+        self.cache.clear()
+        self.t += 1
+        return True

@@ -1,0 +1,49 @@
+"""Staleness-weighted cached aggregation (paper Eqs. 6-10)."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def staleness_weight(staleness, a: float = 0.5):
+    """Eq. 6: S(t - h_c) = (t - h_c + 1)^(-a)."""
+    return (jnp.asarray(staleness, jnp.float32) + 1.0) ** (-a)
+
+
+def weighted_average(updates: Sequence[Any], staleness: Sequence[float],
+                     n_samples: Sequence[float], a: float = 0.5) -> Any:
+    """Eq. 7: u = sum_c S(t-h_c) n_c w_c / sum_c S(t-h_c) n_c."""
+    s = staleness_weight(jnp.asarray(staleness), a)
+    n = jnp.asarray(n_samples, jnp.float32)
+    wts = s * n
+    wts = wts / jnp.sum(wts)
+
+    def avg(*leaves):
+        return sum(w * l for w, l in zip(wts, leaves))
+
+    return jax.tree.map(avg, *updates)
+
+
+def mixing_alpha(staleness: Sequence[float], alpha: float, a: float = 0.5):
+    """Eqs. 8-9: alpha^t = alpha * S(mean staleness)."""
+    delta = jnp.mean(jnp.asarray(staleness, jnp.float32))
+    return alpha * staleness_weight(delta, a)
+
+
+def merge_global(w_global: Any, u: Any, alpha_t) -> Any:
+    """Eq. 10: w^{t+1} = alpha^t u + (1 - alpha^t) w^t."""
+    return jax.tree.map(lambda wu, wg: alpha_t * wu + (1.0 - alpha_t) * wg,
+                        u, w_global)
+
+
+def aggregate_cache(w_global: Any, cache: List[Tuple[Any, int, int]],
+                    t: int, alpha: float, a: float = 0.5) -> Any:
+    """Full server aggregation step over cached (update, h_c, n_c) entries."""
+    updates = [c[0] for c in cache]
+    staleness = [t - c[1] for c in cache]
+    n_samples = [c[2] for c in cache]
+    u = weighted_average(updates, staleness, n_samples, a)
+    a_t = mixing_alpha(staleness, alpha, a)
+    return merge_global(w_global, u, a_t)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (make_fmnist_like, make_token_batch,
+                                  partition_dirichlet, partition_iid,
+                                  partition_noniid_classes)

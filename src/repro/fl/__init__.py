@@ -1,0 +1,3 @@
+from repro.fl.protocols import (best_acc_within, make_setup,
+                                profile_compression, run_method, time_to_acc)
+from repro.fl.simulator import FLSimulator, LogEntry, SimConfig

@@ -1,0 +1,84 @@
+"""Protocol runners: one-call drivers for each method in the paper's §5."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.compression import roundtrip_pytree
+from repro.core.dynamic import (DEFAULT_SET_Q, DEFAULT_SET_S, greedy_search,
+                                make_schedule)
+from repro.data.synthetic import (make_fmnist_like, partition_iid,
+                                  partition_noniid_classes)
+from repro.fl.simulator import FLSimulator, LogEntry, SimConfig
+from repro.models.cnn import cnn_accuracy, init_cnn
+
+METHODS = ("fedavg", "fedasync", "tea", "teas", "teaq", "teastatic",
+           "teasq", "moon", "port", "asofed")
+
+
+def make_setup(n_devices: int = 100, iid: bool = True, seed: int = 0,
+               n_train: int = 60000, n_test: int = 10000):
+    data = make_fmnist_like(n_train, n_test, seed=seed)
+    if iid:
+        parts = partition_iid(n_train, n_devices, seed)
+    else:
+        parts = partition_noniid_classes(data["y_train"], n_devices, 2, seed)
+    w0 = init_cnn(jax.random.PRNGKey(seed))
+    return data, parts, w0
+
+
+def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
+                 **kw) -> Any:
+    """Briefly train a global model (TEA protocol) and return its weights —
+    Algorithm 5 profiles compression on a TRAINED model, not the random
+    init (a random model's accuracy is insensitive to compression, so the
+    search would pick maximum compression)."""
+    cfg = SimConfig(method="tea", n_devices=len(parts), seed=seed,
+                    **{k: v for k, v in kw.items() if hasattr(SimConfig, k)})
+    sim = FLSimulator(data, parts, w0, cfg)
+    sim.run(time_budget=time_budget, eval_every=10 ** 9)
+    return sim.server.w
+
+
+def profile_compression(w: Any, data: Dict[str, np.ndarray], theta: float = 0.02,
+                        seed: int = 0):
+    """Algorithm 5 search on a profiling model ``w``."""
+    xs = data["x_test"][:2000]
+    ys = data["y_test"][:2000]
+    eval_jit = jax.jit(cnn_accuracy)
+    rng = np.random.RandomState(seed)
+
+    def eval_acc(p_s: float, p_q: int) -> float:
+        w2, _ = roundtrip_pytree(w, p_s, p_q, rng)
+        return float(eval_jit(w2, xs, ys))
+
+    return greedy_search(eval_acc, theta)
+
+
+def run_method(method: str, data, parts, w0, *, iid: bool = True,
+               time_budget: float = 300.0, seed: int = 0,
+               c_fraction: float = 0.1, mu: float = 0.01, alpha: float = 0.6,
+               p_s: float = 0.25, p_q: int = 8,
+               schedule=None, eval_every: int = 1,
+               **overrides) -> List[LogEntry]:
+    cfg = SimConfig(method=method, n_devices=len(parts),
+                    c_fraction=c_fraction, mu=mu, alpha=alpha,
+                    p_s=p_s, p_q=p_q, schedule=schedule, seed=seed,
+                    **overrides)
+    sim = FLSimulator(data, parts, w0, cfg)
+    return sim.run(time_budget=time_budget, eval_every=eval_every)
+
+
+def best_acc_within(history: List[LogEntry], budget: float) -> float:
+    accs = [h.accuracy for h in history if h.time <= budget]
+    return max(accs) if accs else float("nan")
+
+
+def time_to_acc(history: List[LogEntry], target: float) -> Optional[float]:
+    for h in history:
+        if h.accuracy >= target:
+            return h.time
+    return None

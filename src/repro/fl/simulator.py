@@ -1,0 +1,299 @@
+"""Event-driven asynchronous FL simulator (virtual wall-clock).
+
+Faithfully executes the TEASQ-Fed protocol of Fig. 1 over N devices with the
+paper's wireless + shifted-exponential latency model, running *real* JAX
+local training (prox-SGD on the Fashion-MNIST-like CNN).  Also drives the
+baselines: FedAvg (synchronous), FedAsync (immediate update), TEA-Fed
+(no compression), TEAS/TEAQ/TEAStatic/TEASQ (compression variants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import local_update
+from repro.core.compression import (pytree_dense_bytes, roundtrip_pytree)
+from repro.core.dynamic import CompressionSchedule
+from repro.core.latency import (ComputeConfig, WirelessConfig, comm_latency,
+                                device_rates, sample_compute_latency)
+from repro.core.server import ServerConfig, TeasqServer
+from repro.core.staleness import staleness_weight
+from repro.models.cnn import cnn_accuracy, cnn_features, cnn_forward, cnn_loss
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "mu_con", "tau"))
+def _moon_sgd_step(params, batch, lr: float, mu_con: float, tau: float):
+    """MOON (Li et al., CVPR'21) local step: CE + model-contrastive loss
+    pulling representations toward the global model and away from the
+    device's previous local model."""
+
+    def loss_fn(p):
+        logits = cnn_forward(p, batch["images"])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, batch["labels"][:, None], 1).mean()
+        z = cnn_features(p, batch["images"])
+        zg = cnn_features(batch["glob"], batch["images"])
+        zp = cnn_features(batch["prev"], batch["images"])
+
+        def cos(a, b):
+            return (a * b).sum(-1) / (jnp.linalg.norm(a, axis=-1)
+                                      * jnp.linalg.norm(b, axis=-1) + 1e-8)
+
+        sim_g = cos(z, zg) / tau
+        sim_p = cos(z, zp) / tau
+        lcon = -(sim_g - jnp.logaddexp(sim_g, sim_p)).mean()
+        return ce + mu_con * lcon
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads), loss
+
+
+@dataclasses.dataclass
+class SimConfig:
+    # teasq | teastatic | teas | teaq | tea | fedavg | fedasync
+    # SOTA baselines (§5.2.5): moon (sync, model-contrastive),
+    # port (async, unbounded concurrency + capped poly staleness weight),
+    # asofed (async, staleness-adaptive local lr)
+    method: str = "teasq"
+    n_devices: int = 100
+    c_fraction: float = 0.1
+    gamma: float = 0.1
+    alpha: float = 0.6
+    a: float = 0.5
+    mu: float = 0.01
+    epochs: int = 2
+    batch_size: int = 40
+    lr: float = 0.08
+    # compression (used by teas/teaq/teastatic/teasq)
+    p_s: float = 1.0
+    p_q: int = 32
+    schedule: Optional[CompressionSchedule] = None
+    # latency model
+    wireless: WirelessConfig = dataclasses.field(default_factory=WirelessConfig)
+    compute: ComputeConfig = dataclasses.field(default_factory=ComputeConfig)
+    # fedavg / fedasync
+    devices_per_round: int = 10
+    max_staleness: int = 4
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LogEntry:
+    time: float
+    round: int
+    accuracy: float
+    bytes_up: int
+    bytes_down: int
+    max_model_bytes_up: int
+    max_model_bytes_down: int
+
+
+class FLSimulator:
+    def __init__(self, data: Dict[str, np.ndarray],
+                 partitions: List[np.ndarray], w_init: Any, cfg: SimConfig):
+        self.cfg = cfg
+        self.data = data
+        self.partitions = partitions
+        self.rng = np.random.RandomState(cfg.seed)
+        n = cfg.n_devices
+        assert len(partitions) == n
+        self.down_rates, self.up_rates = device_rates(n, cfg.wireless, self.rng)
+        self.a_k = self.rng.uniform(cfg.compute.a_min, cfg.compute.a_max, n)
+        self.phi_k = np.full(n, cfg.compute.phi)
+        self.server = TeasqServer(w_init, ServerConfig(
+            n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self.max_up = 0
+        self.max_down = 0
+        self.prev_local: Dict[int, Any] = {}   # MOON: per-device prev model
+        self._eval = jax.jit(cnn_accuracy)
+        self.history: List[LogEntry] = []
+
+    # ------------------------------------------------------------------
+    def _compression_at(self, t: int) -> Tuple[float, int]:
+        c = self.cfg
+        if c.method in ("tea", "fedavg", "fedasync", "moon", "port", "asofed"):
+            return 1.0, 32
+        if c.method == "teasq" and c.schedule is not None:
+            return c.schedule.at_round(t)
+        if c.method == "teas":
+            return c.p_s, 32
+        if c.method == "teaq":
+            return 1.0, c.p_q
+        return c.p_s, c.p_q       # teastatic (or teasq without schedule)
+
+    def _channel(self, tree: Any, p_s: float, p_q: int) -> Tuple[Any, int]:
+        """Lossy compress->decompress; returns (received tree, wire bytes)."""
+        if p_s >= 1.0 and p_q >= 32:
+            return tree, pytree_dense_bytes(tree)
+        return roundtrip_pytree(tree, p_s, p_q, self.rng)
+
+    def _train_device(self, k: int, w: Any) -> Tuple[Any, int]:
+        idx = self.partitions[k]
+        x, y = self.data["x_train"][idx], self.data["y_train"][idx]
+        if self.cfg.method == "moon":
+            return self._train_device_moon(k, w, x, y), len(idx)
+        w_new, _, steps = local_update(
+            w, x, y, cnn_loss, epochs=self.cfg.epochs,
+            batch_size=self.cfg.batch_size, lr=self.cfg.lr, mu=self.cfg.mu,
+            rng=self.rng)
+        return w_new, len(idx)
+
+    def _train_device_moon(self, k: int, w_glob: Any, x, y) -> Any:
+        prev = self.prev_local.get(k, w_glob)
+        params = w_glob
+        bs = self.cfg.batch_size
+        for _ in range(self.cfg.epochs):
+            order = self.rng.permutation(len(y))
+            for s in range(0, len(y) - bs + 1, bs):
+                sel = order[s:s + bs]
+                batch = {"images": jnp.asarray(x[sel]),
+                         "labels": jnp.asarray(y[sel]),
+                         "glob": w_glob, "prev": prev}
+                params, _ = _moon_sgd_step(params, batch, self.cfg.lr,
+                                           mu_con=1.0, tau=0.5)
+        self.prev_local[k] = params
+        return params
+
+    def _round_latency(self, k: int, bits_down: float, bits_up: float,
+                       n_batches: int) -> Tuple[float, float, float]:
+        dl = comm_latency(bits_down, self.down_rates[k])
+        ul = comm_latency(bits_up, self.up_rates[k])
+        cp = sample_compute_latency(self.a_k[k], self.phi_k[k],
+                                    tau_b=n_batches * self.cfg.epochs
+                                    * 0.002 * self.cfg.batch_size,
+                                    rng=self.rng)
+        return dl, cp, ul
+
+    def evaluate(self) -> float:
+        xs, ys = self.data["x_test"], self.data["y_test"]
+        accs = []
+        for s in range(0, len(ys), 2000):
+            accs.append(float(self._eval(self.server.w,
+                                         jnp.asarray(xs[s:s + 2000]),
+                                         jnp.asarray(ys[s:s + 2000]))))
+        return float(np.mean(accs))
+
+    def _log(self, time: float):
+        self.history.append(LogEntry(
+            time, self.server.t, self.evaluate(), self.bytes_up,
+            self.bytes_down, self.max_up, self.max_down))
+
+    # ------------------------------------------------------------------
+    def run(self, time_budget: float = 300.0, max_rounds: int = 10 ** 9,
+            eval_every: int = 1) -> List[LogEntry]:
+        if self.cfg.method in ("fedavg", "moon"):
+            return self._run_fedavg(time_budget, max_rounds, eval_every)
+        return self._run_async(time_budget, max_rounds, eval_every)
+
+    def _async_alpha(self, staleness: int) -> float:
+        """Per-method immediate-update mixing weight (async baselines)."""
+        cfg = self.cfg
+        if cfg.method == "port":       # unbounded staleness, harder decay
+            return cfg.alpha * (staleness + 1.0) ** -1.0
+        if cfg.method == "asofed":     # linear decay
+            return cfg.alpha / (1.0 + staleness)
+        stale = min(staleness, cfg.max_staleness)   # fedasync: capped poly
+        return cfg.alpha * float(staleness_weight(stale, cfg.a))
+
+    # -- asynchronous protocols (teasq family + fedasync) ----------------
+    def _run_async(self, time_budget: float, max_rounds: int,
+                   eval_every: int) -> List[LogEntry]:
+        cfg = self.cfg
+        events: List[Tuple[float, int, str, int, Any, int]] = []
+        seq = 0
+
+        def push(t, kind, k, payload=None, h=0):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, k, payload, h))
+            seq += 1
+
+        waiting: List[int] = []
+        for k in range(cfg.n_devices):
+            push(self.rng.uniform(0, 0.05), "request", k)
+
+        self._log(0.0)
+        fedasync = cfg.method in ("fedasync", "port", "asofed")
+
+        while events:
+            now, _, kind, k, payload, h = heapq.heappop(events)
+            if now > time_budget or self.server.t >= max_rounds:
+                break
+            if kind == "request":
+                grant = self.server.try_dispatch()
+                if grant is None:
+                    waiting.append(k)
+                    continue
+                w_t, t0 = grant
+                p_s, p_q = self._compression_at(t0)
+                w_recv, nbytes_down = self._channel(w_t, p_s, p_q)
+                self.bytes_down += nbytes_down
+                self.max_down = max(self.max_down, nbytes_down)
+                w_local, n_k = self._train_device(k, w_recv)
+                w_up, nbytes_up = self._channel(w_local, p_s, p_q)
+                self.bytes_up += nbytes_up
+                self.max_up = max(self.max_up, nbytes_up)
+                n_batches = max(1, n_k // cfg.batch_size)
+                dl, cp, ul = self._round_latency(
+                    k, nbytes_down * 8, nbytes_up * 8, n_batches)
+                push(now + dl + cp + ul, "arrival", k, (w_up, n_k), t0)
+            else:  # arrival
+                w_local, n_k = payload
+                if fedasync:
+                    self.server.active = max(0, self.server.active - 1)
+                    a_t = self._async_alpha(self.server.t - h)
+                    self.server.w = jax.tree.map(
+                        lambda wl, wg: a_t * wl + (1 - a_t) * wg,
+                        w_local, self.server.w)
+                    self.server.t += 1
+                    done_round = True
+                else:
+                    done_round = self.server.receive(w_local, h, n_k)
+                if done_round and self.server.t % eval_every == 0:
+                    self._log(now)
+                push(now, "request", k)
+                while waiting and self.server.active < self.server.cfg.max_parallel:
+                    push(now, "request", waiting.pop(0))
+        self._log(min(now, time_budget))
+        return self.history
+
+    # -- synchronous FedAvg ----------------------------------------------
+    def _run_fedavg(self, time_budget: float, max_rounds: int,
+                    eval_every: int) -> List[LogEntry]:
+        cfg = self.cfg
+        now = 0.0
+        self._log(now)
+        while now < time_budget and self.server.t < max_rounds:
+            sel = self.rng.choice(cfg.n_devices, cfg.devices_per_round,
+                                  replace=False)
+            updates, weights, latencies = [], [], []
+            for k in sel:
+                nbytes = pytree_dense_bytes(self.server.w)
+                self.bytes_down += nbytes
+                self.max_down = max(self.max_down, nbytes)
+                w_local, n_k = self._train_device(k, self.server.w)
+                self.bytes_up += nbytes
+                self.max_up = max(self.max_up, nbytes)
+                n_batches = max(1, n_k // cfg.batch_size)
+                dl, cp, ul = self._round_latency(k, nbytes * 8, nbytes * 8,
+                                                 n_batches)
+                latencies.append(dl + cp + ul)
+                updates.append(w_local)
+                weights.append(n_k)
+            wts = np.asarray(weights, np.float32)
+            wts /= wts.sum()
+            self.server.w = jax.tree.map(
+                lambda *ls: sum(w * l for w, l in zip(wts, ls)), *updates)
+            self.server.t += 1
+            now += max(latencies)        # straggler-bound synchronous round
+            if self.server.t % eval_every == 0:
+                self._log(now)
+        return self.history

@@ -1,0 +1,1 @@
+from repro.kernels.ops import compress_roundtrip, ssd

@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret=True`` everywhere by default: this container is CPU-only, so the
+kernels execute their bodies in Python (bit-accurate) while targeting TPU
+``pallas_call`` + BlockSpec lowering.  On real TPU hardware pass
+``interpret=False`` (or set REPRO_PALLAS_NATIVE=1).
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ssd_scan import ssd_chunked_pallas
+from repro.kernels.topk_quant import DEFAULT_BLOCK, dequant, topk_quant
+
+_NATIVE = bool(int(os.environ.get("REPRO_PALLAS_NATIVE", "0")))
+
+
+def compress_roundtrip(x: jax.Array, p_s: float = 0.25, bits: int = 8,
+                       block: int = DEFAULT_BLOCK,
+                       interpret: bool = None) -> jax.Array:
+    """Kernel-backed lossy compress->decompress of an arbitrary tensor."""
+    if interpret is None:
+        interpret = not _NATIVE
+    levels, scales = topk_quant(x.reshape(-1), p_s=p_s, bits=bits,
+                                block=block, interpret=interpret)
+    return dequant(levels, scales, bits, x.size, x.shape).astype(x.dtype)
+
+
+def ssd(xh, b, c, dt, la, chunk: int, use_pallas: bool = True,
+        interpret: bool = None):
+    """Mamba2 SSD: kernel-backed or pure-jnp reference."""
+    if interpret is None:
+        interpret = not _NATIVE
+    if use_pallas:
+        return ssd_chunked_pallas(xh, b, c, dt, la, chunk,
+                                  interpret=interpret)
+    return ref.ssd_full_ref(xh, b, c, dt, la, chunk)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# topk_quant oracle: block-local Top-K (threshold) + symmetric int quant
+# ----------------------------------------------------------------------
+def topk_quant_ref(x: jax.Array, p_s: float, bits: int,
+                   iters: int = 16) -> Tuple[jax.Array, jax.Array]:
+    """x: (M, B) blocks -> (levels int8 (M,B), scales f32 (M,1)).
+
+    Per block: binary-search the magnitude threshold keeping ~p_s of entries
+    (the TPU-native sort-free Top-K), then quantize kept values to ``bits``
+    bits with a per-block max-abs scale.
+    """
+    ax = jnp.abs(x.astype(jnp.float32))
+
+    def per_block(axb, xb):
+        hi0 = jnp.max(axb) + 1e-12
+        lo0 = jnp.zeros((), jnp.float32)
+
+        def body(_, lh):
+            lo, hi = lh
+            mid = 0.5 * (lo + hi)
+            frac = jnp.mean((axb >= mid).astype(jnp.float32))
+            keep = frac > p_s
+            return jnp.where(keep, mid, lo), jnp.where(keep, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+        thr = 0.5 * (lo + hi)
+        mask = axb >= thr
+        kept = jnp.where(mask, xb.astype(jnp.float32), 0.0)
+        L = 2 ** (bits - 1) - 1
+        scale = jnp.maximum(jnp.max(jnp.abs(kept)), 1e-12)
+        levels = jnp.clip(jnp.round(kept / scale * L), -L, L).astype(jnp.int8)
+        return levels, scale
+
+    levels, scales = jax.vmap(per_block)(ax, x)
+    return levels, scales[:, None]
+
+
+def dequant_ref(levels: jax.Array, scales: jax.Array, bits: int) -> jax.Array:
+    L = 2 ** (bits - 1) - 1
+    return levels.astype(jnp.float32) * scales / L
+
+
+# ----------------------------------------------------------------------
+# SSD intra-chunk oracle (one chunk, one head)
+# ----------------------------------------------------------------------
+def ssd_chunk_ref(xb: jax.Array, b: jax.Array, c: jax.Array, cum: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of SSD.
+    xb: (L,P) dt-scaled inputs; b,c: (L,N); cum: (L,) cumulative log decay.
+    Returns (y_intra (L,P), state (N,P), chunk_decay scalar exp(cum[-1]))."""
+    xb = xb.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    L_ = xb.shape[0]
+    cb = c @ b.T                                      # (L,L)
+    mask = jnp.tril(jnp.ones((L_, L_), bool))
+    diff = jnp.where(mask, cum[:, None] - cum[None, :], -jnp.inf)
+    m = jnp.exp(diff)
+    y = (cb * m) @ xb                                 # (L,P)
+    decay_to_end = jnp.exp(cum[-1] - cum)             # (L,)
+    state = (b * decay_to_end[:, None]).T @ xb        # (N,P)
+    return y, state, jnp.exp(cum[-1])
+
+
+def ssd_full_ref(xh, b, c, dt, la, chunk: int):
+    """Full-sequence oracle — delegates to the model's chunked implementation
+    (itself validated against one-token recurrence in tests)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(xh, b, c, dt, la, chunk)

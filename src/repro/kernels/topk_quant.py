@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused block Top-K sparsification + int8/int4 quantization.
+
+The paper's wire-compression hot spot (Alg. 3), TPU-adapted: instead of a
+global sort (hostile to the VPU/MXU), each VMEM block finds its magnitude
+threshold with a fixed-iteration binary search (vector compares + reductions
+only), masks, and quantizes with a per-block max-abs scale.  Block-local K
+approximates global Top-K; the approximation error is bounded by inter-block
+magnitude skew and measured in tests/test_kernels.py.
+
+Layout: x is reshaped to (M, BLOCK); grid = (M,); each program compresses one
+BLOCK-sized row resident in VMEM.  Outputs: int8 levels (M, BLOCK) and f32
+scales (M, 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16384          # 64 KiB f32 per block — comfortably in VMEM
+
+
+def _kernel(x_ref, levels_ref, scale_ref, *, p_s: float, bits: int,
+            iters: int):
+    x = x_ref[...]                                  # (1, BLOCK)
+    ax = jnp.abs(x.astype(jnp.float32))
+    hi0 = jnp.max(ax) + 1e-12
+    lo0 = jnp.zeros((), jnp.float32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        frac = jnp.mean((ax >= mid).astype(jnp.float32))
+        keep = frac > p_s
+        return jnp.where(keep, mid, lo), jnp.where(keep, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    thr = 0.5 * (lo + hi)
+    mask = ax >= thr
+    kept = jnp.where(mask, x.astype(jnp.float32), 0.0)
+    L = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(kept)), 1e-12)
+    levels = jnp.clip(jnp.round(kept / scale * L), -L, L)
+    levels_ref[...] = levels.astype(jnp.int8)
+    scale_ref[...] = scale.reshape(1, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p_s", "bits", "iters", "block",
+                                    "interpret"))
+def topk_quant(x: jax.Array, *, p_s: float = 0.25, bits: int = 8,
+               iters: int = 16, block: int = DEFAULT_BLOCK,
+               interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Compress a flat array: -> (levels int8 (M,block), scales f32 (M,1)).
+
+    Pads x up to a multiple of ``block``.  ``interpret=True`` runs the kernel
+    body in Python on CPU (this container has no TPU); on TPU pass False.
+    """
+    n = x.size
+    m = -(-n // block)
+    xp = jnp.zeros((m * block,), x.dtype).at[:n].set(x.reshape(-1))
+    xp = xp.reshape(m, block)
+
+    kern = functools.partial(_kernel, p_s=p_s, bits=bits, iters=iters)
+    levels, scales = pl.pallas_call(
+        kern,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, block), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    return levels, scales
+
+
+def dequant(levels: jax.Array, scales: jax.Array, bits: int,
+            n: int, shape) -> jax.Array:
+    L = 2 ** (bits - 1) - 1
+    flat = (levels.astype(jnp.float32) * scales / L).reshape(-1)[:n]
+    return flat.reshape(shape)

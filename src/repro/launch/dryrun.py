@@ -1,0 +1,557 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and only the dry-run wants 512 placeholder host devices.
+
+For each combination this lowers the appropriate step
+  train_4k     -> fed_train_step (TEASQ-Fed round: local prox steps +
+                  compressed delta exchange + staleness-weighted merge)
+                  or plain_train_step with --step plain
+  prefill_32k  -> serve prefill (full prompt -> last logits + KV cache)
+  decode_32k   -> serve decode (1 token, full 32k KV cache)
+  long_500k    -> serve decode (1 token, rolling 8k window / SSM state)
+compiles it, and records memory_analysis / cost_analysis / HLO collective
+bytes into a JSON that benchmarks/roofline.py turns into EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.fed_step import FedConfig, fed_wire_bytes, make_fed_train_step
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.sharding.rules import Rules, param_shardings, use_rules
+
+TRANSFORMER_ARCHS = tuple(a for a in ARCH_IDS if a != "fmnist_cnn")
+
+
+# ----------------------------------------------------------------------
+# step builders
+# ----------------------------------------------------------------------
+def build_train(cfg, rules, fed: FedConfig, plain: bool, remat: bool = True,
+                loss_chunk: int = 0):
+    loss_fn = lambda p, b: T.lm_loss(p, b, cfg, remat=remat,
+                                     loss_chunk=loss_chunk)[0]
+    if plain:
+        def step(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            new = jax.tree.map(lambda p, g: (p - 1e-3 * g).astype(p.dtype),
+                               params, grads)
+            return new, loss
+        return step, False
+    return make_fed_train_step(loss_fn, fed), True
+
+
+def build_args_train(cfg, shape_name, rules, fed: Optional[FedConfig]):
+    params = S.param_specs(cfg)
+    batch = S.batch_specs(cfg, shape_name)
+    in_sh = [param_shardings(rules, params), S.batch_shardings(rules, batch)]
+    args = [params, batch]
+    if fed is not None:
+        args.append(jax.ShapeDtypeStruct((fed.n_groups,), jnp.int32))
+        in_sh.append(NamedSharding(rules.mesh, P()))
+    return args, in_sh
+
+
+def build_prefill(cfg, rules):
+    if cfg.is_encoder_decoder:
+        def step(params, batch):
+            return T.encdec_prefill(params, batch, cfg,
+                                    cache_len=batch["tokens"].shape[1])
+    else:
+        def step(params, batch):
+            return T.prefill(params, batch, cfg)
+    return step
+
+
+def build_decode(cfg, shape_name, rules, seq_shard_kv: bool = False,
+                 kv_quant: bool = False):
+    _, _, _, rolling = S.decode_specs(cfg, shape_name, quantized=kv_quant)
+
+    def step(params, tok, pos, cache):
+        return T.decode_step(params, tok["tokens"], pos, cfg, cache,
+                             rolling=rolling, seq_shard_kv=seq_shard_kv)
+
+    return step
+
+
+# ----------------------------------------------------------------------
+# HLO collective accounting
+# ----------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _result_shape_bytes(line: str, op_start: int) -> int:
+    """Bytes of the result shape: between '=' and the op name."""
+    eq = line.find("=")
+    if eq < 0 or eq >= op_start:
+        seg = line
+    else:
+        seg = line[eq + 1:op_start]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_dev: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return n_dev
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?to_apply=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split optimized HLO text into computations with their instructions."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if not line.startswith(" ") and ("->" in s) and s.endswith("{"):
+            m = _COMP_RE.match(s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None and s != "}":
+            comps[cur].append(s)
+    return comps, entry
+
+
+_DOT_RE = re.compile(r"=\s+\S+\s+dot\(([^)]*)\)")
+_FUSION_RE = re.compile(r"\bfusion\(.*?calls=%?([\w.\-]+)")
+_CONTR_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONV_RE = re.compile(r"=\s+\S+\s+convolution\(")
+_NAME_SHAPE_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))")
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+def hlo_flops(hlo_text: str) -> float:
+    """Trip-count-aware dot/conv FLOPs.
+
+    XLA's cost_analysis() counts each while body ONCE regardless of trip
+    count (verified empirically), so scanned layer stacks are undercounted
+    by ~n_layers.  This walks the computation graph like collective_bytes(),
+    multiplying loop bodies by their trip counts, and counts
+    2 * prod(result_dims) * prod(contracted lhs dims) per dot.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return 0.0
+
+    # symbol tables: computation -> {instr name -> dims list}
+    tables: Dict[str, Dict[str, list]] = {}
+    for cname, instrs in comps.items():
+        tab = {}
+        for ins in instrs:
+            m = _NAME_SHAPE_RE.match(ins)
+            if m:
+                dims = _shape_dims(m.group(2))
+                if dims is not None:
+                    tab[m.group(1)] = dims
+        tables[cname] = tab
+
+    def trip_count(cond):
+        best = 1
+        for ins in comps.get(cond, ()):
+            for mm in _TRIP_RE.finditer(ins):
+                best = max(best, int(mm.group(1)))
+        return best
+
+    def comp_flops(name: str, depth: int = 0) -> float:
+        if depth > 50:
+            return 0.0
+        total = 0.0
+        tab = tables.get(name, {})
+        for ins in comps.get(name, ()):
+            dm = _DOT_RE.search(ins)
+            if dm:
+                nm = _NAME_SHAPE_RE.match(ins)
+                res = _shape_dims(nm.group(2)) if nm else None
+                ops = [o.strip().lstrip("%") for o in dm.group(1).split(",")]
+                cm = _CONTR_RE.search(ins)
+                k = 1
+                if cm and ops:
+                    lhs_dims = tab.get(ops[0])
+                    if lhs_dims:
+                        for i in (int(x) for x in cm.group(1).split(",") if x):
+                            if i < len(lhs_dims):
+                                k *= lhs_dims[i]
+                if res:
+                    n = 1
+                    for d in res:
+                        n *= d
+                    total += 2.0 * n * k
+            if _WHILE_RE.search(ins):
+                b, c = _BODY_RE.search(ins), _COND_RE.search(ins)
+                if b:
+                    t = trip_count(c.group(1)) if c else 1
+                    total += t * comp_flops(b.group(1), depth + 1)
+            else:
+                fm = _FUSION_RE.search(ins)
+                cm2 = _CALL_RE.search(ins)
+                if fm:
+                    total += comp_flops(fm.group(1), depth + 1)
+                elif cm2:
+                    total += comp_flops(cm2.group(1), depth + 1)
+        return total
+
+    return comp_flops(entry)
+
+
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "bitcast-convert(")
+
+
+def hlo_bytes(hlo_text: str) -> float:
+    """Trip-count-aware HBM byte traffic estimate: per top-level instruction
+    (fusions count their operands + result once; loop bodies x trip count)."""
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return 0.0
+    _dtype_re = _SHAPE_RE
+
+    def line_bytes(ins: str, op_start: int, tab) -> float:
+        res = _result_shape_bytes(ins, op_start)
+        args = ins[op_start:]
+        # slicing ops (incl. fusions wrapping them) touch only the slice:
+        # bytes = 2 * smallest participating buffer
+        if "dynamic-update-slice" in ins or "dynamic-slice" in ins \
+                or " slice(" in ins:
+            m = re.search(r"\(([^)]*)\)", args)
+            sizes = [res] if res else []
+            if m:
+                for o in m.group(1).split(","):
+                    d = tab.get(o.strip().lstrip("%"))
+                    if d:
+                        sizes.append(d)
+            return 2.0 * min(sizes) if sizes else 0.0
+        total = res
+        m = re.search(r"\(([^)]*)\)", args)
+        if m:
+            for o in m.group(1).split(","):
+                o = o.strip().lstrip("%")
+                d = tab.get(o)
+                if d:
+                    total += d
+        return total
+
+    # per-computation: name -> bytes of each instruction's result
+    tables: Dict[str, Dict[str, float]] = {}
+    for cname, instrs in comps.items():
+        tab = {}
+        for ins in instrs:
+            m = _NAME_SHAPE_RE.match(ins)
+            if m:
+                eq = ins.find("=")
+                tab[m.group(1)] = _result_shape_bytes(ins, len(ins)) if eq < 0 \
+                    else _result_shape_bytes(ins, _op_start_after_eq(ins))
+        tables[cname] = tab
+
+    def trip_count(cond):
+        best = 1
+        for ins in comps.get(cond, ()):
+            for mm in _TRIP_RE.finditer(ins):
+                best = max(best, int(mm.group(1)))
+        return best
+
+    def walk(name: str, depth: int = 0) -> float:
+        if depth > 50:
+            return 0.0
+        total = 0.0
+        tab = tables.get(name, {})
+        for ins in comps.get(name, ()):
+            if any(s in ins for s in _SKIP_OPS):
+                continue
+            if _WHILE_RE.search(ins):
+                b, c = _BODY_RE.search(ins), _COND_RE.search(ins)
+                if b:
+                    total += (trip_count(c.group(1)) if c else 1) * \
+                        walk(b.group(1), depth + 1)
+                continue
+            cm2 = _CALL_RE.search(ins)
+            if cm2 and " call(" in ins:
+                total += walk(cm2.group(1), depth + 1)
+                continue
+            ostart = _op_start_after_eq(ins)
+            total += line_bytes(ins, ostart, tab)
+        return total
+
+    return walk(entry)
+
+
+def _op_start_after_eq(ins: str) -> int:
+    eq = ins.find("=")
+    if eq < 0:
+        return 0
+    m = re.match(r"\s*(?:\([^)]*\)|\S+)\s", ins[eq + 1:])
+    return eq + 1 + (m.end() if m else 0)
+
+
+def collective_bytes(hlo_text: str, n_dev: int) -> Dict[str, float]:
+    """Per-device link bytes by collective kind, trip-count aware.
+
+    Ring estimates: all-gather: out_bytes*(g-1)/g; all-reduce: 2*b*(g-1)/g;
+    reduce-scatter / all-to-all / permute: b*(g-1)/g.  HLO shapes are
+    per-partition in SPMD modules.  Collectives inside ``while`` bodies
+    (lax.scan over layers / chunks) are multiplied by the loop trip count
+    parsed from the loop condition's comparison constant.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return {"total": 0.0}
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for ins in comps.get(cond_name, ()):
+            if "compare" in ins or "constant" in ins:
+                for mm in _TRIP_RE.finditer(ins):
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        acc: Dict[str, float] = {}
+        memo[name] = acc  # cycle guard
+        for ins in comps.get(name, ()):
+            mm = _COLL_RE.search(ins)
+            if mm and "-done" not in ins[:mm.end()]:
+                kind = mm.group(1)
+                nbytes = _result_shape_bytes(ins, mm.start(1))
+                g = _group_size(ins, n_dev)
+                frac = (g - 1) / g if g > 1 else 0.0
+                moved = (2 if kind == "all-reduce" else 1) * nbytes * frac
+                acc[kind] = acc.get(kind, 0.0) + moved
+                acc[kind + "_count"] = acc.get(kind + "_count", 0) + 1
+            if _WHILE_RE.search(ins):
+                b = _BODY_RE.search(ins)
+                c = _COND_RE.search(ins)
+                if b:
+                    t = trip_count(c.group(1)) if c else 1
+                    sub = walk(b.group(1))
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + t * v
+            else:
+                cm = _CALL_RE.search(ins)
+                if cm:
+                    sub = walk(cm.group(1))
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + v
+        return acc
+
+    out = dict(walk(entry))
+    out["total"] = sum(v for k, v in out.items() if not k.endswith("_count"))
+    return out
+
+
+# ----------------------------------------------------------------------
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            step_kind: str = "fed", fed_schedule: str = "gather_q",
+            local_steps: int = 1, p_q: int = 8, loss_chunk: int = 0,
+            seq_shard_kv: bool = False, kv_quant: bool = False,
+            group_parallelism: str = "tp",
+            variant: str = "", verbose: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = Rules(mesh)
+    n_dev = mesh.size
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": step_kind if shape.kind == "train" else shape.kind,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if variant:
+        rec["variant"] = variant
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            n_groups = mesh.shape.get("pod", 1) * mesh.shape["data"]
+            fed = None
+            if step_kind == "fed":
+                fed = FedConfig(n_groups=n_groups, local_steps=local_steps,
+                                schedule=fed_schedule, p_q=p_q,
+                                group_parallelism=group_parallelism)
+                rec["fed"] = {"n_groups": n_groups, "schedule": fed_schedule,
+                              "p_q": p_q, "local_steps": local_steps}
+                rec["wire"] = fed_wire_bytes(S.param_specs(cfg), fed, n_groups)
+            fn, _ = build_train(cfg, rules, fed, plain=step_kind == "plain",
+                                loss_chunk=loss_chunk)
+            args, in_sh = build_args_train(cfg, shape_name, rules, fed)
+        elif shape.kind == "prefill":
+            fn = build_prefill(cfg, rules)
+            params = S.param_specs(cfg)
+            batch = S.batch_specs(cfg, shape_name)
+            args = [params, batch]
+            in_sh = [param_shardings(rules, params),
+                     S.batch_shardings(rules, batch)]
+        else:  # decode
+            fn = build_decode(cfg, shape_name, rules,
+                              seq_shard_kv=seq_shard_kv, kv_quant=kv_quant)
+            params = S.param_specs(cfg)
+            tok, cache, pos, rolling = S.decode_specs(cfg, shape_name,
+                                                      quantized=kv_quant)
+            rec["rolling_window"] = bool(rolling) and S.WINDOW or 0
+            args = [params, tok, pos, cache]
+            in_sh = [param_shardings(rules, params),
+                     S.batch_shardings(rules, tok),
+                     NamedSharding(mesh, P()),
+                     S.cache_shardings(rules, cache,
+                                       seq_shard=seq_shard_kv)]
+
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+    rec["lower_s"] = round(t_lower - t0, 1)
+    rec["compile_s"] = round(t_compile - t_lower, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       (k in ("flops", "bytes accessed") or
+                        k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt, n_dev)
+        # trip-count-aware corrections (XLA cost_analysis counts while
+        # bodies once; scanned stacks undercount by ~n_layers)
+        rec.setdefault("cost", {})["flops_trip_aware"] = hlo_flops(txt)
+        rec["cost"]["bytes_trip_aware"] = hlo_bytes(txt)
+    except Exception as e:  # pragma: no cover
+        rec["collectives_error"] = str(e)
+
+    if verbose:
+        flops = rec.get("cost", {}).get("flops", 0)
+        coll = rec.get("collectives", {}).get("total", 0)
+        print(f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+              f"lower={rec['lower_s']:6.1f}s compile={rec['compile_s']:6.1f}s "
+              f"flops/dev={flops:.3e} coll/dev={coll:.3e}B", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (10 assigned archs)")
+    ap.add_argument("--shape", default="all",
+                    help="input shape or 'all' (4 assigned shapes)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", default="fed", choices=["fed", "plain"])
+    ap.add_argument("--fed-schedule", default="gather_q",
+                    choices=["gather_q", "gather_f32", "psum"])
+    ap.add_argument("--p-q", type=int, default=8)
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = TRANSFORMER_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("step"),
+             r.get("fed", {}).get("schedule")) for r in results}
+
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, "2x16x16" if mp else "16x16",
+                       args.step if INPUT_SHAPES[shape].kind == "train"
+                       else INPUT_SHAPES[shape].kind,
+                       args.fed_schedule if (INPUT_SHAPES[shape].kind == "train"
+                                             and args.step == "fed") else None)
+                if key in done:
+                    continue
+                try:
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  step_kind=args.step,
+                                  fed_schedule=args.fed_schedule,
+                                  p_q=args.p_q)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "step": args.step, "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] FAIL {arch} {shape}: {e!r}", flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"[dryrun] complete: {len(results)} records, {n_fail} failures")
+
+
+if __name__ == "__main__":
+    main()

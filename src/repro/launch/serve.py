@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.models import transformer as T
+
+
+def generate(params, cfg, prompts: jnp.ndarray, gen: int, frames=None,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S) -> (B, S+gen) greedy/temperature sampling."""
+    B, S = prompts.shape
+    if cfg.is_encoder_decoder:
+        logits, cache = T.encdec_prefill(
+            params, {"tokens": prompts, "frames": frames}, cfg, cache_len=S)
+    else:
+        logits, cache = T.prefill(params, {"tokens": prompts}, cfg)
+    cache = T.extend_cache(cache, S + gen)
+
+    step = jax.jit(lambda p, t, pos, c: T.decode_step(p, t, pos, cfg, c))
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+
+    def sample(lg, key):
+        if temperature <= 0:
+            return lg.argmax(-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)
+
+    tok = sample(logits[:, -1], key)[:, None]
+    for i in range(gen):
+        out.append(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = step(params, tok, jnp.int32(S + i), cache)
+        tok = sample(logits[:, -1], sub)[:, None]
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.RandomState(args.seed)
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(
+            rng.randn(args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    seqs = generate(params, cfg, prompts, args.gen, frames,
+                    args.temperature, args.seed)
+    dt = time.time() - t0
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen} in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s)")
+    print("[serve] first sequence tail:", np.asarray(seqs[0, -8:]).tolist())
+
+
+if __name__ == "__main__":
+    main()

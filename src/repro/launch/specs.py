@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) pair.
+
+No device allocation: everything here is abstract (eval_shape / SDS), the
+same pattern as lowering against placeholder inputs.  Modality frontends
+(whisper mel+conv, VLM ViT) are stubbed per the assignment: specs include
+precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, get_config
+from repro.models import transformer as T
+from repro.sharding.rules import Rules, logical_axes_for, param_shardings
+
+PARAM_DTYPE = jnp.bfloat16
+WINDOW = 8192                  # sliding-window size for long_500k decode
+
+
+def param_specs(cfg: ModelConfig, dtype=PARAM_DTYPE):
+    """Abstract parameter pytree via eval_shape (no allocation)."""
+    fn = partial(T.init_model, cfg=cfg, dtype=dtype)
+    return jax.eval_shape(fn, jax.random.PRNGKey(0))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str,
+                n_groups: int = 1) -> Dict[str, SDS]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    s = INPUT_SHAPES[shape_name]
+    B = s.global_batch
+    out = {"tokens": SDS((B, s.seq_len), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), PARAM_DTYPE)
+    if cfg.n_patches:
+        out["patches"] = SDS((B, cfg.n_patches, cfg.d_model), PARAM_DTYPE)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape_name: str, quantized: bool = False
+                 ) -> Tuple[Dict[str, SDS], Any, SDS, bool]:
+    """-> (token batch, cache pytree specs, pos spec, rolling)."""
+    s = INPUT_SHAPES[shape_name]
+    B = s.global_batch
+    rolling = shape_name == "long_500k" and not (cfg.is_ssm_only)
+    cache_len = min(s.seq_len, WINDOW) if rolling else s.seq_len
+    cache = jax.eval_shape(
+        partial(T.init_decode_state, cfg, B, cache_len, PARAM_DTYPE, rolling,
+                quantized=quantized))
+    tok = {"tokens": SDS((B, 1), jnp.int32)}
+    return tok, cache, SDS((), jnp.int32), rolling
+
+
+# ----------------------------------------------------------------------
+# shardings
+# ----------------------------------------------------------------------
+def batch_shardings(rules: Rules, batch):
+    def f(x):
+        return rules.sharding(("batch",) + (None,) * (x.ndim - 1), x.shape)
+    return jax.tree.map(f, batch)
+
+
+_CACHE_LOGICAL = {
+    "k": ("stack", "batch", "seq", "kv_heads", "head_dim"),
+    "v": ("stack", "batch", "seq", "kv_heads", "head_dim"),
+    "k_scale": ("stack", "batch", "seq", "kv_heads"),
+    "v_scale": ("stack", "batch", "seq", "kv_heads"),
+    "xk": ("stack", "batch", "seq", "kv_heads", "head_dim"),
+    "xv": ("stack", "batch", "seq", "kv_heads", "head_dim"),
+    "state": ("stack", "batch", "ssm_heads", None, None),
+    "conv": ("stack", "batch", None, None),
+}
+
+# sequence-sharded KV variant: cache seq axis on the 'model' mesh axis
+_CACHE_LOGICAL_SEQSHARD = dict(
+    _CACHE_LOGICAL,
+    k=("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+    v=("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+)
+
+
+def cache_shardings(rules: Rules, cache, seq_shard: bool = False):
+    table = _CACHE_LOGICAL_SEQSHARD if seq_shard else _CACHE_LOGICAL
+    if seq_shard:
+        rules = rules.with_overrides(kv_seq="model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        name = None
+        for p in path:
+            if hasattr(p, "key"):
+                name = str(p.key)
+        logical = table.get(name, (None,) * leaf.ndim)
+        if len(logical) != leaf.ndim:  # hybrid: extra stacked axis
+            logical = ("stack",) + tuple(logical)
+        logical = logical[:leaf.ndim]
+        out.append(rules.sharding(logical, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,75 @@
+"""The paper's Fashion-MNIST CNN (TEASQ-Fed §5.1).
+
+"two 2x2 convolutional layers, a fully connected layer, and a softmax
+output" — conv(2x2,32) + pool, conv(2x2,32) + pool, fc(128), fc(10).
+~206k float32 params ≈ 0.8 MB, matching Table 7's 794.66 KB model size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_cnn(key, n_classes: int = 10, channels: int = 32,
+             fc_width: int = 128) -> Dict[str, jax.Array]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv_init(k, h, w, cin, cout):
+        scale = 1.0 / math.sqrt(h * w * cin)
+        return jax.random.uniform(k, (h, w, cin, cout), jnp.float32,
+                                  -scale, scale)
+
+    flat = 7 * 7 * channels
+    return {
+        "conv1": conv_init(k1, 2, 2, 1, channels),
+        "b1": jnp.zeros((channels,)),
+        "conv2": conv_init(k2, 2, 2, channels, channels),
+        "b2": jnp.zeros((channels,)),
+        "fc1": jax.random.uniform(k3, (flat, fc_width), jnp.float32,
+                                  -1.0 / math.sqrt(flat), 1.0 / math.sqrt(flat)),
+        "bf1": jnp.zeros((fc_width,)),
+        "fc2": jax.random.uniform(k4, (fc_width, n_classes), jnp.float32,
+                                  -1.0 / math.sqrt(fc_width), 1.0 / math.sqrt(fc_width)),
+        "bf2": jnp.zeros((n_classes,)),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def cnn_features(params, images: jax.Array) -> jax.Array:
+    """Penultimate representation (used by the MOON baseline's contrastive
+    term)."""
+    x = jax.nn.relu(_conv(images, params["conv1"], params["b1"]))
+    x = _pool(x)
+    x = jax.nn.relu(_conv(x, params["conv2"], params["b2"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ params["fc1"] + params["bf1"])
+
+
+def cnn_forward(params, images: jax.Array) -> jax.Array:
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    return cnn_features(params, images) @ params["fc2"] + params["bf2"]
+
+
+def cnn_loss(params, batch) -> jax.Array:
+    logits = cnn_forward(params, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1).mean()
+
+
+def cnn_accuracy(params, images, labels) -> jax.Array:
+    return (cnn_forward(params, images).argmax(-1) == labels).mean()

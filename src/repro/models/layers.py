@@ -1,0 +1,92 @@
+"""Primitive layers: norms, rotary, SwiGLU MLP, embeddings (pure JAX)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard
+
+
+def _uniform(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return _uniform(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+# -- norms --------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(x, scale, eps: float = 1e-5):
+    """qk-norm: RMS over head_dim (last axis) with learned scale (head_dim,)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# -- rotary -------------------------------------------------------------
+def rotary(x, positions, theta: float = 10000.0):
+    """Apply rotary embedding. x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP: SwiGLU (gated, default) or GELU (non-gated, e.g. granite) -------
+def mlp_init(key, d: int, f: int, dtype=jnp.float32, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, d, f, dtype)
+    return p
+
+
+def mlp(params, x):
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ params["w_down"]
+
+
+# -- embeddings ----------------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return _uniform(key, (vocab, d), 1.0 / math.sqrt(d), dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def lm_head(x, table: Optional[jax.Array], head: Optional[jax.Array]):
+    """Project to vocab logits (tied table or separate head). f32 logits."""
+    if head is not None:
+        logits = x @ head
+    else:
+        logits = x @ table.T
+    return shard(logits.astype(jnp.float32), "batch", "seq", "vocab")

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX reference path.
+
+Chunked SSD: within a chunk the recurrence is unrolled into a masked
+quadratic (attention-like) form; across chunks a ``lax.scan`` carries the
+(H, P, N) state.  ``kernels/ssd_scan.py`` provides the Pallas TPU kernel for
+the intra-chunk part; this module is the oracle and the dry-run path.
+
+Decode is the O(1) recurrence: h = a*h + dt*B⊗x ; y = C·h + D*x.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, rmsnorm_init
+from repro.sharding.rules import shard
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * n + h          # z, x, B, C, dt
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.uniform(k1, (d, d_in_proj), dtype, -scale, scale),
+        "conv_w": jax.random.uniform(k2, (w, di + 2 * n), dtype, -0.5, 0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "ssm_d": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": jax.random.uniform(
+            k3, (di, d), dtype, -1.0 / math.sqrt(di), 1.0 / math.sqrt(di)),
+        "gate_norm": rmsnorm_init(di, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(u, w):
+    """u: (B,S,C), w: (W,C) — per-channel causal conv via shifted adds."""
+    W = w.shape[0]
+    out = u * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(u[:, :-i, :], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def _ssd_inputs(params, proj, cfg, conv_fn=_causal_conv):
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = jax.nn.silu(conv_fn(xbc, params["conv_w"]))
+    x = xbc[..., :di]
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    B_, S_ = x.shape[0], x.shape[1]
+    xh = x.reshape(B_, S_, h, p)
+    la = -jnp.exp(params["a_log"]) * dt                                 # (B,S,H) log decay
+    return z, xh, b, c, dt, la
+
+
+def ssd_chunked(xh, b, c, dt, la, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. xh (B,S,H,P), b/c (B,S,N), dt/la (B,S,H).
+    Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    nc = S // L
+
+    xb = (xh * dt[..., None]).reshape(B, nc, L, H, P).astype(jnp.float32)
+    bc_ = b.reshape(B, nc, L, N).astype(jnp.float32)
+    cc_ = c.reshape(B, nc, L, N).astype(jnp.float32)
+    lac = la.reshape(B, nc, L, H)
+    cum = jnp.cumsum(lac, axis=2)                          # (B,nc,L,H)
+
+    # intra-chunk (quadratic within chunk).  Mask the EXPONENT, not the
+    # exponential: upper-triangular entries have positive log-decay and
+    # exp() overflows to inf, which poisons gradients (inf * 0 = nan in vjp).
+    cb = jnp.einsum("bcln,bcmn->bclm", cc_, bc_)           # (B,nc,L,L)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    m = jnp.exp(diff)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", cb, m, xb)
+
+    # chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,L,H)
+    s_c = jnp.einsum("bcln,bclh,bclhp->bchpn", bc_, decay_to_end, xb)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_body(hprev, inputs):
+        s_ci, a_ci = inputs
+        hnew = a_ci[:, :, None, None] * hprev + s_ci
+        return hnew, hprev
+
+    hfin, hprevs = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                    # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cc_, jnp.exp(cum), hprevs)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(xh.dtype), hfin
+
+
+def ssm_forward(params, x, cfg, init_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B,S,D) -> (B,S,D)."""
+    proj = x @ params["in_proj"]
+    di, n = cfg.d_inner, cfg.ssm_state
+    z, xh, b, c, dt, la = _ssd_inputs(params, proj, cfg)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    y, state = ssd_chunked(xh, b, c, dt, la, cfg.ssm_chunk, init_state)
+    y = y + (params["ssm_d"][:, None]
+             * (xh.astype(jnp.float32) * dt[..., None])).astype(y.dtype)
+    B_, S_ = x.shape[0], x.shape[1]
+    y = y.reshape(B_, S_, cfg.d_inner)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = shard(y @ params["out_proj"], "batch", "seq", "d_model")
+    if return_state:
+        w = cfg.ssm_conv_width
+        xbc_raw = proj[..., di:di + di + 2 * n]
+        tail = xbc_raw[:, -(w - 1):, :]
+        pad = w - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"state": state, "conv": tail.astype(x.dtype)}
+    return out
+
+
+# -- decode -------------------------------------------------------------
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssm_decode(params, x, cfg, cache):
+    """One-token recurrence. x: (B,1,D)."""
+    B = x.shape[0]
+    proj = x @ params["in_proj"]                            # (B,1,*)
+
+    def conv_step(u, w):
+        # u: (B,1,C); cache["conv"]: (B,W-1,C)
+        hist = jnp.concatenate([cache["conv"], u], axis=1)  # (B,W,C)
+        out = jnp.einsum("bwc,wc->bc", hist, w)[:, None, :]
+        return out, hist[:, 1:, :]
+
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_out, new_conv = conv_step(xbc, params["conv_w"])
+    xbc = jax.nn.silu(conv_out)
+    xv = xbc[..., :di].reshape(B, h, p)
+    b = xbc[..., di:di + n][:, 0, :]                        # (B,N)
+    c = xbc[..., di + n:][:, 0, :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0, :]  # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)             # (B,H)
+
+    xbar = xv.astype(jnp.float32) * dt[..., None]           # (B,H,P)
+    new_state = (a[:, :, None, None] * cache["state"]
+                 + jnp.einsum("bhp,bn->bhpn", xbar, b.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c.astype(jnp.float32))
+    y = y + params["ssm_d"][:, None] * xbar
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], {"state": new_state, "conv": new_conv}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,
+                                    clip_by_global_norm, cosine_schedule, sgd)

@@ -1,0 +1,99 @@
+"""Compression (Alg. 3/4) unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (compress_tensor, decompress_tensor,
+                                    pytree_dense_bytes, pytree_wire_bytes,
+                                    quantize_levels, roundtrip_pytree,
+                                    sparsify_quantize_dense, tensor_wire_bits,
+                                    topk_mask, compress_pytree)
+
+
+def test_topk_mask_keeps_k_largest():
+    x = jnp.asarray(np.random.RandomState(0).randn(1000).astype(np.float32))
+    mask = topk_mask(x, 0.1)
+    k = int(mask.sum())
+    assert 100 <= k <= 101  # ties
+    kept_min = float(jnp.abs(x)[mask].min())
+    dropped_max = float(jnp.abs(x)[~mask].max())
+    assert kept_min >= dropped_max
+
+
+def test_quantize_dequantize_error_bound():
+    x = jnp.asarray(np.random.RandomState(1).randn(4096).astype(np.float32))
+    for bits in (16, 8, 4):
+        lv, sc = quantize_levels(x, bits)
+        from repro.core.compression import dequantize_levels
+        y = dequantize_levels(lv, sc, bits)
+        L = 2 ** (bits - 1) - 1
+        assert float(jnp.abs(y - x).max()) <= float(sc) / L * 0.5 + 1e-6
+
+
+def test_roundtrip_preserves_top_values():
+    rng = np.random.RandomState(2)
+    tree = {"a": rng.randn(100, 50).astype(np.float32),
+            "b": rng.randn(37).astype(np.float32)}
+    out, nbytes = roundtrip_pytree(tree, 0.3, 8)
+    dense = pytree_dense_bytes(tree)
+    assert nbytes < dense * 0.45  # ~0.3*(8+13)/32 + overhead
+    for k in tree:
+        x, y = tree[k].reshape(-1), np.asarray(out[k]).reshape(-1)
+        top = np.argsort(-np.abs(x))[: int(0.25 * x.size)]
+        scale = np.abs(x).max()
+        np.testing.assert_allclose(y[top], x[top], atol=scale / 127 * 1.5)
+
+
+def test_paper_table7_size_reduction():
+    """Table 7: TEASQ local-model wire size ~44% smaller than dense f32.
+    With p_s=0.5, p_q=16 the packed size must land in that regime."""
+    rng = np.random.RandomState(3)
+    from repro.models.cnn import init_cnn
+    w = init_cnn(jax.random.PRNGKey(0))
+    dense = pytree_dense_bytes(w)
+    c = compress_pytree(w, 0.5, 16, rng)
+    wire = pytree_wire_bytes(c)
+    red = 1 - wire / dense
+    assert 0.2 < red < 0.6, f"reduction {red:.2f}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_s=st.sampled_from([0.05, 0.1, 0.25, 0.5, 1.0]),
+       p_q=st.sampled_from([4, 8, 16, 32]),
+       n=st.integers(10, 2000))
+def test_wire_bytes_monotone_and_bounded(p_s, p_q, n):
+    """Property: wire size decreases with compression and never exceeds
+    dense f32 (plus per-tensor scale overhead)."""
+    rng = np.random.RandomState(n)
+    x = rng.randn(n).astype(np.float32)
+    c = compress_tensor(x, p_s, p_q, rng)
+    bits = tensor_wire_bits(c)
+    assert bits <= n * 64 + 32
+    if p_s <= 0.25 and p_q <= 8:
+        assert bits < n * 32  # strictly better than dense
+    y = decompress_tensor(c)
+    assert y.shape == x.shape
+    assert np.isfinite(y).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(p_q=st.sampled_from([8, 16]), seed=st.integers(0, 1000))
+def test_stochastic_quantization_unbiased(p_q, seed):
+    """QSGD property: stochastic rounding is unbiased in expectation."""
+    rng = np.random.RandomState(seed)
+    x = np.full(20000, 0.377, np.float32)
+    c = compress_tensor(x, 1.0, p_q, rng)
+    y = decompress_tensor(c)
+    assert abs(y.mean() - 0.377) < 2e-3
+
+
+def test_dense_ingraph_matches_packed_semantics():
+    """sparsify_quantize_dense (fed_step path, global-topk variant) ==
+    compress->decompress for the same parameters."""
+    x = jnp.asarray(np.random.RandomState(5).randn(512).astype(np.float32))
+    y1 = np.asarray(sparsify_quantize_dense(x, 0.25, 8))
+    c = compress_tensor(np.asarray(x), 0.25, 8)
+    y2 = decompress_tensor(c)
+    np.testing.assert_allclose(y1, y2, atol=1e-6)

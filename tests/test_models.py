@@ -1,0 +1,163 @@
+"""Model correctness: decode==forward, flash==plain, prefill continuation,
+SSD==naive recurrence, MoE routing properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+CONSISTENCY_ARCHS = ["qwen3_1_7b", "granite_34b", "smollm_135m",
+                     "mamba2_370m", "jamba_v0_1_52b", "phi3_5_moe_42b",
+                     "moonshot_v1_16b", "llama4_scout_17b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_model(KEY, cfg)
+    S = 12
+    toks = jnp.asarray(np.random.RandomState(1).randint(0, cfg.vocab, (2, S)),
+                       jnp.int32)
+    full, _ = T.forward(params, {"tokens": toks}, cfg)
+    cache = T.init_decode_state(cfg, 2, S, dtype=jnp.float32)
+    for t in range(S):
+        dl, cache = T.decode_step(params, toks[:, t:t + 1], jnp.int32(t),
+                                  cfg, cache)
+        np.testing.assert_allclose(np.asarray(dl[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "mamba2_370m", "phi3_5_moe_42b"])
+def test_prefill_then_decode_continuation(arch):
+    """prefill(prompt) + decode_step(next) == forward(prompt+next)."""
+    cfg = get_smoke_config(arch)
+    params = T.init_model(KEY, cfg)
+    S = 8
+    toks = jnp.asarray(np.random.RandomState(2).randint(0, cfg.vocab, (2, S + 1)),
+                       jnp.int32)
+    full, _ = T.forward(params, {"tokens": toks}, cfg)
+    logits_p, cache = T.prefill(params, {"tokens": toks[:, :S]}, cfg)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(full[:, S - 1]), atol=2e-5, rtol=2e-5)
+    if not cfg.is_ssm_only:
+        cache = T.extend_cache(cache, S + 1)
+    dl, _ = T.decode_step(params, toks[:, S:S + 1], jnp.int32(S), cfg, cache)
+    np.testing.assert_allclose(np.asarray(dl[:, 0]), np.asarray(full[:, S]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_whisper_encdec_prefill_matches_forward():
+    cfg = get_smoke_config("whisper_tiny")
+    params = T.init_model(KEY, cfg)
+    rng = np.random.RandomState(3)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (2, 8)), jnp.int32),
+             "frames": jnp.asarray(rng.randn(2, cfg.enc_seq, cfg.d_model),
+                                   jnp.float32)}
+    full, _ = T.forward(params, batch, cfg)
+    lp, cache = T.encdec_prefill(params, batch, cfg, cache_len=8)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_rolling_window_decode_matches_windowed_attention():
+    """Rolling KV cache beyond the window == sliding-window attention."""
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = T.init_model(KEY, cfg)
+    W, S = 8, 20
+    toks = jnp.asarray(np.random.RandomState(4).randint(0, cfg.vocab, (1, S)),
+                       jnp.int32)
+    full, _ = T.forward(params, {"tokens": toks}, cfg, window=W)
+    cache = T.init_decode_state(cfg, 1, W, dtype=jnp.float32, rolling=True)
+    for t in range(S):
+        dl, cache = T.decode_step(params, toks[:, t:t + 1], jnp.int32(t),
+                                  cfg, cache, rolling=True)
+        np.testing.assert_allclose(np.asarray(dl[:, 0]), np.asarray(full[:, t]),
+                                   atol=3e-5, rtol=3e-5)
+
+
+# -- attention ------------------------------------------------------------
+def test_flash_matches_plain_various_chunks():
+    cfg = get_smoke_config("granite_34b")  # MQA kv=1 stresses grouping
+    p = A.attn_init(jax.random.PRNGKey(5), cfg)
+    x = jnp.asarray(np.random.RandomState(5).randn(2, 512, cfg.d_model),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(512), (2, 512))
+    o_ref = A.attn_forward(p, x, pos, cfg, flash_threshold=10 ** 9)
+    o_fl = A.attn_forward(p, x, pos, cfg, flash_threshold=256)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_fl),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_window_masks_correctly():
+    cfg = get_smoke_config("qwen3_1_7b")
+    p = A.attn_init(jax.random.PRNGKey(6), cfg)
+    x = jnp.asarray(np.random.RandomState(6).randn(1, 256, cfg.d_model),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(256), (1, 256))
+    o_w = A.attn_forward(p, x, pos, cfg, flash_threshold=64, window=32)
+    o_p = A.attn_forward(p, x, pos, cfg, flash_threshold=10 ** 9, window=32)
+    np.testing.assert_allclose(np.asarray(o_w), np.asarray(o_p),
+                               atol=1e-5, rtol=1e-5)
+    o_full = A.attn_forward(p, x, pos, cfg, flash_threshold=10 ** 9)
+    assert float(jnp.abs(o_full - o_w).max()) > 1e-3  # window actually cuts
+
+
+# -- SSD vs naive per-token recurrence -------------------------------------
+def test_ssd_chunked_equals_token_recurrence():
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    rng = np.random.RandomState(7)
+    xh = jnp.asarray(rng.randn(B, S, H, P).astype(np.float32))
+    b = jnp.asarray(rng.randn(B, S, N).astype(np.float32)) * 0.5
+    c = jnp.asarray(rng.randn(B, S, N).astype(np.float32)) * 0.5
+    dt = jnp.abs(jnp.asarray(rng.randn(B, S, H).astype(np.float32))) * 0.2
+    la = -jnp.abs(jnp.asarray(rng.randn(B, S, H).astype(np.float32))) * 0.1
+    y_chunk, h_chunk = SSM.ssd_chunked(xh, b, c, dt, la, 8)
+    # naive recurrence
+    h = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    for t in range(S):
+        a = np.exp(np.asarray(la[:, t]))                      # (B,H)
+        xbar = np.asarray(xh[:, t]) * np.asarray(dt[:, t])[..., None]
+        h = a[..., None, None] * h + np.einsum(
+            "bhp,bn->bhpn", xbar, np.asarray(b[:, t]))
+        ys.append(np.einsum("bhpn,bn->bhp", h, np.asarray(c[:, t])))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_naive, atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), h, atol=1e-4, rtol=1e-4)
+
+
+# -- MoE -------------------------------------------------------------------
+def test_moe_routing_topk_weights_sum_to_one():
+    cfg = get_smoke_config("phi3_5_moe_42b")
+    p = M.moe_init(jax.random.PRNGKey(8), cfg)
+    x = jnp.asarray(np.random.RandomState(8).randn(16, cfg.d_model),
+                    jnp.float32)
+    w, e, probs = M._route(p["router"], x, cfg.moe_top_k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-6)
+    assert int(e.max()) < cfg.n_experts
+    # top-k experts are distinct per token
+    assert all(len(set(row)) == cfg.moe_top_k for row in np.asarray(e))
+
+
+def test_moe_load_balance_loss_minimal_when_uniform():
+    probs = jnp.full((64, 4), 0.25)
+    e = jnp.asarray(np.arange(128).reshape(64, 2) % 4, jnp.int32)
+    lb = M._load_balance_loss(probs, e, 4)
+    np.testing.assert_allclose(float(lb), 1.0, atol=1e-5)
+
+
+def test_moe_dispatch_ranks_unique_per_expert():
+    e = jnp.asarray(np.random.RandomState(9).randint(0, 4, (32, 2)), jnp.int32)
+    rank, fe = M._dispatch_ranks(e, 4)
+    rank, fe = np.asarray(rank), np.asarray(fe)
+    for ex in range(4):
+        r = rank[fe == ex]
+        assert sorted(r) == list(range(len(r)))  # 0..count-1, unique

@@ -1,0 +1,113 @@
+"""Server state machine (Algs. 1-2), dynamic compression (Alg. 5), and the
+event-driven simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dynamic import (DEFAULT_SET_Q, DEFAULT_SET_S,
+                                CompressionSchedule, greedy_search,
+                                make_schedule)
+from repro.core.server import ServerConfig, TeasqServer
+from repro.fl.protocols import make_setup, run_method
+
+
+# -- C-fraction admission (Alg. 1 server side) ---------------------------
+def test_c_fraction_gate():
+    srv = TeasqServer({"w": jnp.zeros(2)}, ServerConfig(
+        n_devices=100, c_fraction=0.1))
+    grants = [srv.try_dispatch() for _ in range(15)]
+    assert sum(g is not None for g in grants) == 10  # ceil(100*0.1)
+    assert srv.active == 10
+    # a completed upload frees a slot
+    srv.receive({"w": jnp.ones(2)}, h=0, n_samples=10)
+    assert srv.active == 9
+    assert srv.try_dispatch() is not None
+
+
+def test_cache_aggregates_at_K():
+    srv = TeasqServer({"w": jnp.zeros(2)}, ServerConfig(
+        n_devices=30, c_fraction=0.5, gamma=0.1, alpha=1.0))
+    K = srv.cfg.cache_size
+    assert K == 3
+    for i in range(K - 1):
+        assert not srv.receive({"w": jnp.ones(2)}, h=0, n_samples=10)
+        assert srv.t == 0
+    assert srv.receive({"w": jnp.ones(2)}, h=0, n_samples=10)
+    assert srv.t == 1
+    assert len(srv.cache) == 0
+    np.testing.assert_allclose(np.asarray(srv.w["w"]), [1.0, 1.0], atol=1e-6)
+
+
+# -- Algorithm 5 ---------------------------------------------------------
+def test_greedy_search_respects_theta():
+    """Synthetic accuracy surface: acc = 0.9 - penalties. The search must
+    stop at the most compressed point within theta of baseline."""
+    def eval_acc(p_s, p_q):
+        pen_s = {1.0: 0.0, 0.5: 0.005, 0.25: 0.01, 0.1: 0.03,
+                 0.05: 0.08, 0.01: 0.2}[p_s]
+        pen_q = {32: 0.0, 16: 0.002, 8: 0.008, 4: 0.06}[p_q]
+        return 0.9 - pen_s - pen_q
+
+    si, qi, trace = greedy_search(eval_acc, theta=0.02)
+    assert DEFAULT_SET_S[si] == 0.25       # 0.01 penalty ok, 0.03 too much
+    # at p_s=0.25: + quant 16 (0.012 total ok); 8 -> 0.018 ok; 4 -> 0.07 no
+    assert DEFAULT_SET_Q[qi] == 8
+    assert len(trace) >= 3
+
+
+def test_schedule_decays_toward_less_compression():
+    sch = CompressionSchedule(p_s0_idx=3, p_q0_idx=2, step_size=10)
+    p_s0, p_q0 = sch.at_round(0)
+    p_s_end, p_q_end = sch.at_round(100)
+    assert p_s0 < p_s_end and p_q0 < p_q_end
+    assert (p_s_end, p_q_end) == (1.0, 32)  # fully decayed
+    # monotone
+    prev = (p_s0, p_q0)
+    for t in range(0, 60, 10):
+        cur = sch.at_round(t)
+        assert cur[0] >= prev[0] and cur[1] >= prev[1]
+        prev = cur
+
+
+def test_make_schedule_starts_more_compressed():
+    sch = make_schedule(si=1, qi=1, total_rounds=40)
+    assert sch.p_s0_idx == 2 and sch.p_q0_idx == 2
+
+
+# -- simulator (small end-to-end runs) ------------------------------------
+@pytest.fixture(scope="module")
+def tiny_setup():
+    return make_setup(n_devices=10, iid=True, seed=0, n_train=1000, n_test=500)
+
+
+def test_simulator_tea_improves_accuracy(tiny_setup):
+    data, parts, w0 = tiny_setup
+    hist = run_method("tea", data, parts, w0, time_budget=15.0, eval_every=1,
+                      epochs=2)
+    assert hist[-1].round >= 2
+    assert max(h.accuracy for h in hist) > hist[0].accuracy + 0.02
+    times = [h.time for h in hist]
+    assert times == sorted(times)
+
+
+def test_simulator_bytes_accounting(tiny_setup):
+    data, parts, w0 = tiny_setup
+    h_tea = run_method("tea", data, parts, w0, time_budget=6.0, epochs=1)
+    h_sq = run_method("teastatic", data, parts, w0, time_budget=6.0,
+                      epochs=1, p_s=0.25, p_q=8)
+    assert h_sq[-1].max_model_bytes_up < h_tea[-1].max_model_bytes_up * 0.5
+
+
+def test_simulator_fedavg_runs(tiny_setup):
+    data, parts, w0 = tiny_setup
+    hist = run_method("fedavg", data, parts, w0, time_budget=8.0,
+                      epochs=1, devices_per_round=3)
+    assert hist[-1].round >= 1
+    assert np.isfinite(hist[-1].accuracy)
+
+
+def test_simulator_fedasync_runs(tiny_setup):
+    data, parts, w0 = tiny_setup
+    hist = run_method("fedasync", data, parts, w0, time_budget=6.0, epochs=1)
+    assert hist[-1].round >= 2

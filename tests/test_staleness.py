@@ -1,0 +1,72 @@
+"""Staleness-weighted aggregation (Eqs. 6-10) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.staleness import (aggregate_cache, merge_global, mixing_alpha,
+                                  staleness_weight, weighted_average)
+
+
+def test_eq6_staleness_weight():
+    # S(s) = (s+1)^-a
+    assert float(staleness_weight(0, 0.5)) == 1.0
+    np.testing.assert_allclose(float(staleness_weight(3, 0.5)), 0.5)
+    np.testing.assert_allclose(float(staleness_weight(1, 1.0)), 0.5)
+
+
+def test_eq7_weighted_average_exact():
+    u1 = {"w": jnp.asarray([1.0, 0.0])}
+    u2 = {"w": jnp.asarray([0.0, 1.0])}
+    # staleness 0 vs 3 (a=0.5 -> weights 1, 0.5), n = 100, 200
+    u = weighted_average([u1, u2], [0, 3], [100, 200], a=0.5)
+    # weights: 1*100=100, 0.5*200=100 -> equal mix
+    np.testing.assert_allclose(np.asarray(u["w"]), [0.5, 0.5], atol=1e-6)
+
+
+def test_eq9_eq10_merge():
+    w = {"w": jnp.asarray([0.0])}
+    u = {"w": jnp.asarray([1.0])}
+    a_t = mixing_alpha([0, 0], alpha=0.6, a=0.5)
+    np.testing.assert_allclose(float(a_t), 0.6)
+    out = merge_global(w, u, a_t)
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.6], atol=1e-6)
+
+
+def test_staler_updates_matter_less():
+    w = {"w": jnp.zeros(3)}
+    fresh = ({"w": jnp.ones(3)}, 10, 100)    # h_c = t  -> staleness 0
+    stale = ({"w": -jnp.ones(3)}, 0, 100)    # h_c = 0  -> staleness 10
+    out = aggregate_cache(w, [fresh, stale], t=10, alpha=1.0, a=0.5)
+    # u = (1*1 + 0.30*-1)/1.30 ~ 0.536; alpha_t = (5+1)^-0.5 ~ 0.408
+    assert float(out["w"][0]) > 0.15
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 20), min_size=2, max_size=8),
+       st.floats(0.1, 1.0))
+def test_aggregation_is_convex_combination(stalenesses, alpha):
+    """Property: the new global model is a convex combination of the old
+    model and the cached updates -> stays inside their value hull."""
+    rng = np.random.RandomState(42)
+    updates = [{"w": jnp.asarray(rng.uniform(-1, 1, 4).astype(np.float32))}
+               for _ in stalenesses]
+    w0 = {"w": jnp.asarray(rng.uniform(-1, 1, 4).astype(np.float32))}
+    cache = [(u, int(max(stalenesses) - s), 10) for u, s in
+             zip(updates, stalenesses)]
+    out = aggregate_cache(w0, cache, t=int(max(stalenesses)), alpha=alpha)
+    lo = np.minimum.reduce([np.asarray(u["w"]) for u in updates]
+                           + [np.asarray(w0["w"])])
+    hi = np.maximum.reduce([np.asarray(u["w"]) for u in updates]
+                           + [np.asarray(w0["w"])])
+    v = np.asarray(out["w"])
+    assert (v >= lo - 1e-5).all() and (v <= hi + 1e-5).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 50), st.floats(0.05, 2.0))
+def test_staleness_weight_properties(s, a):
+    """S is in (0,1], monotone decreasing in staleness."""
+    w1 = float(staleness_weight(s, a))
+    w2 = float(staleness_weight(s + 1, a))
+    assert 0 < w2 < w1 <= 1.0

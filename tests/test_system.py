@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the TEASQ-Fed system (paper claims at
+reduced scale) — the integration layer above the unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dynamic import make_schedule
+from repro.fl.protocols import (best_acc_within, make_setup,
+                                profile_compression, run_method, time_to_acc,
+                                train_global)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 20 devices / 6k samples: big enough for signal, small enough for CI
+    return make_setup(n_devices=20, iid=True, seed=0, n_train=6000,
+                      n_test=1500)
+
+
+@pytest.fixture(scope="module")
+def histories(setup):
+    data, parts, w0 = setup
+    out = {}
+    # 20 devices: C=0.3 keeps 6 in flight (the paper's C=0.1 assumes N=100;
+    # at N=20 it would leave only 2 devices training)
+    out["tea"] = run_method("tea", data, parts, w0, time_budget=40.0,
+                            epochs=2, eval_every=2, c_fraction=0.3)
+    out["fedavg"] = run_method("fedavg", data, parts, w0, time_budget=40.0,
+                               epochs=2, eval_every=2)
+    return out
+
+
+def test_async_beats_sync_in_rounds_per_time(histories):
+    """Paper §5.2: TEA-Fed completes more aggregation rounds than FedAvg in
+    equal virtual time (no straggler waits)."""
+    assert histories["tea"][-1].round > histories["fedavg"][-1].round
+
+
+def test_both_methods_learn(histories):
+    for m, h in histories.items():
+        assert h[-1].accuracy > 0.15, (m, h[-1].accuracy)
+
+
+def test_tea_fed_accuracy_competitive(histories):
+    """TEA-Fed must reach at least FedAvg-level accuracy within the budget
+    (paper reports it strictly better; at tiny scale we assert >= - margin)."""
+    tea = best_acc_within(histories["tea"], 40.0)
+    avg = best_acc_within(histories["fedavg"], 40.0)
+    assert tea >= avg - 0.08, (tea, avg)
+
+
+def test_dynamic_compression_pipeline(setup):
+    """Alg. 5 end-to-end: profile -> schedule -> run TEASQ; compressed wire
+    must be smaller and accuracy must stay in range."""
+    data, parts, w0 = setup
+    # Alg. 5 profiles a TRAINED model (a random init is insensitive to
+    # compression and the search would pick maximum compression)
+    w_warm = train_global(data, parts, w0, time_budget=15.0, epochs=2,
+                          c_fraction=0.3)
+    si, qi, trace = profile_compression(w_warm, data, theta=0.05)
+    sch = make_schedule(si, qi, total_rounds=30)
+    h_sq = run_method("teasq", data, parts, w0, time_budget=30.0,
+                      epochs=2, c_fraction=0.3, schedule=sch)
+    h_tea = run_method("tea", data, parts, w0, time_budget=30.0, epochs=2,
+                       c_fraction=0.3)
+    assert h_sq[-1].bytes_up < h_tea[-1].bytes_up
+    # aggressive early compression: assert stability (no collapse below
+    # chance), not parity — at this 30s budget TEASQ is still in its
+    # most-compressed phase (full parity shown in benchmarks/table3_6)
+    import numpy as _np
+    assert _np.isfinite(max(h.accuracy for h in h_sq))
+    assert max(h.accuracy for h in h_sq) >= 0.09
+
+
+def test_time_to_acc_helper():
+    class H:
+        def __init__(self, t, a):
+            self.time, self.accuracy = t, a
+    hist = [H(0, 0.1), H(5, 0.5), H(9, 0.8)]
+    assert time_to_acc(hist, 0.5) == 5
+    assert time_to_acc(hist, 0.9) is None
+    assert best_acc_within(hist, 6) == 0.5
