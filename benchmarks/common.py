@@ -30,8 +30,14 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
 
 
 class Scale:
-    def __init__(self, full: bool = False):
+    def __init__(self, full: bool = False, backend: str = "engine",
+                 cohort_size: int = 0):
         self.full = full
+        # which simulator runs the protocol: the strategy-based engine
+        # (default) or the legacy monolithic FLSimulator; cohort_size > 0
+        # additionally switches the engine to vectorized cohort training
+        self.backend = backend
+        self.cohort_size = cohort_size
         # keep the paper's N=100 devices even at quick scale — the
         # C-fraction/cache dynamics (10 parallel, K=10) depend on it;
         # quick mode shrinks per-device data instead (120 samples/device)
@@ -63,7 +69,10 @@ def simulate(scale: Scale, method: str, iid: bool = True, seed: int = 0,
     hist = run_method(method, data, parts, w0, iid=iid,
                       time_budget=kw.pop("time_budget", scale.budget_for(iid)),
                       eval_every=kw.pop("eval_every", scale.eval_every),
-                      epochs=kw.pop("epochs", scale.epochs), seed=seed, **kw)
+                      epochs=kw.pop("epochs", scale.epochs), seed=seed,
+                      backend=scale.backend,
+                      cohort_size=kw.pop("cohort_size", scale.cohort_size),
+                      **kw)
     wall = time.time() - t0
     rounds = max(hist[-1].round, 1)
     return {
@@ -134,4 +143,14 @@ def std_argparser(desc: str) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=desc)
     ap.add_argument("--full", action="store_true",
                     help="paper scale (100 devices, 60k samples, 300s)")
+    ap.add_argument("--backend", choices=("engine", "legacy"),
+                    default="engine",
+                    help="protocol runner: strategy engine or legacy sim")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="engine cohort size (>0 = vectorized training)")
     return ap
+
+
+def scale_from_args(args) -> Scale:
+    return Scale(args.full, backend=getattr(args, "backend", "engine"),
+                 cohort_size=getattr(args, "cohort", 0))

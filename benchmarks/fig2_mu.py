@@ -1,5 +1,6 @@
 """Fig. 2: effect of the prox regularization weight mu (non-IID)."""
-from benchmarks.common import Scale, print_csv, record, simulate, std_argparser
+from benchmarks.common import (Scale, print_csv, record,
+                               scale_from_args, simulate, std_argparser)
 
 MUS = [0.0, 0.01, 0.1]
 
@@ -16,7 +17,7 @@ def run(scale: Scale):
 
 def main():
     args = std_argparser(__doc__).parse_args()
-    print_csv("fig2_mu", run(Scale(args.full)))
+    print_csv("fig2_mu", run(scale_from_args(args)))
 
 
 if __name__ == "__main__":

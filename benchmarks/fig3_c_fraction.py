@@ -1,6 +1,7 @@
 """Figs. 3-5: effect of the C-fraction (accuracy vs time and vs rounds,
 time-to-target), IID and non-IID, vs FedAvg / FedAsync baselines."""
-from benchmarks.common import Scale, print_csv, record, simulate, std_argparser
+from benchmarks.common import (Scale, print_csv, record,
+                               scale_from_args, simulate, std_argparser)
 
 CS = [0.05, 0.1, 0.3]
 
@@ -20,7 +21,7 @@ def run(scale: Scale):
 
 def main():
     args = std_argparser(__doc__).parse_args()
-    print_csv("fig3_5_c", run(Scale(args.full)))
+    print_csv("fig3_5_c", run(scale_from_args(args)))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Fig. 6: robustness to the mixing hyper-parameter alpha."""
-from benchmarks.common import Scale, print_csv, record, simulate, std_argparser
+from benchmarks.common import (Scale, print_csv, record,
+                               scale_from_args, simulate, std_argparser)
 
 ALPHAS = [0.2, 0.6, 0.9]
 
@@ -17,7 +18,7 @@ def run(scale: Scale):
 
 def main():
     args = std_argparser(__doc__).parse_args()
-    print_csv("fig6_alpha", run(Scale(args.full)))
+    print_csv("fig6_alpha", run(scale_from_args(args)))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Fig. 8: compression ablation — TEA vs TEAS (sparsification only) vs TEAQ
 (quantization only) vs TEASQ (both)."""
 from benchmarks.common import (Scale, compression_points, print_csv,
-                               record, simulate, std_argparser)
+                               record, scale_from_args, simulate,
+                               std_argparser)
 
 
 def run(scale: Scale):
@@ -18,7 +19,7 @@ def run(scale: Scale):
 
 def main():
     args = std_argparser(__doc__).parse_args()
-    print_csv("fig8_ablation", run(Scale(args.full)))
+    print_csv("fig8_ablation", run(scale_from_args(args)))
 
 
 if __name__ == "__main__":

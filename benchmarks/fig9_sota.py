@@ -2,7 +2,8 @@
 (synchronous, model-contrastive).  See DESIGN.md for the faithful-but-
 simplified baseline implementations."""
 from benchmarks.common import (Scale, compression_points, print_csv,
-                               record, simulate, std_argparser)
+                               record, scale_from_args, simulate,
+                               std_argparser)
 
 
 def run(scale: Scale):
@@ -21,7 +22,7 @@ def run(scale: Scale):
 
 def main():
     args = std_argparser(__doc__).parse_args()
-    print_csv("fig9_sota", run(Scale(args.full)))
+    print_csv("fig9_sota", run(scale_from_args(args)))
 
 
 if __name__ == "__main__":

@@ -11,8 +11,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (fig2_mu, fig3_c_fraction, fig6_alpha, fig8_ablation,
-                        fig9_sota, table3_6_compression, table7_sizes)
+from benchmarks import (engine_scale, fig2_mu, fig3_c_fraction, fig6_alpha,
+                        fig8_ablation, fig9_sota, table3_6_compression,
+                        table7_sizes)
 from benchmarks.common import Scale, print_csv
 
 SUITES = {
@@ -23,6 +24,7 @@ SUITES = {
     "fig8": (fig8_ablation, "fig8_ablation"),
     "table7": (table7_sizes, "table7"),
     "fig9": (fig9_sota, "fig9_sota"),
+    "engine_scale": (engine_scale, "engine_scale"),
 }
 
 
@@ -33,8 +35,9 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     args = ap.parse_args()
 
+    # engine_scale is a wall-clock race at N=1000 — opt-in via --only
     names = [n.strip() for n in args.only.split(",") if n.strip()] or \
-        list(SUITES)
+        [n for n in SUITES if n != "engine_scale"]
     scale = Scale(args.full)
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -47,6 +50,11 @@ def main() -> None:
                     d = "iid" if r["iid"] else "noniid"
                     print(f"table7/{r['method']}_{d},{r['us_per_round']:.1f},"
                           f"max_up_{r['max_up_kb']:.1f}KB")
+            elif name == "engine_scale":
+                for r in rows:
+                    print(f"engine_scale/{r['backend']}_n{r['n_devices']},"
+                          f"{r['wall_s'] * 1e6 / max(r['rounds'], 1):.1f},"
+                          f"wall={r['wall_s']:.1f}s_rounds={r['rounds']}")
             else:
                 print_csv(tag, rows)
         except Exception as e:  # pragma: no cover

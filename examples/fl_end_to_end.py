@@ -2,7 +2,9 @@
 
 Trains the Fashion-MNIST CNN with all the paper's methods for a few hundred
 simulated seconds (several hundred aggregation rounds for the async methods)
-and prints the Table-5-style comparison.
+and prints the Table-5-style comparison.  Runs on the strategy-based
+``FLEngine`` by default; ``--backend legacy`` selects the monolithic
+reference simulator and ``--cohort 32`` enables vectorized cohort training.
 
   PYTHONPATH=src python examples/fl_end_to_end.py [--budget 120] [--noniid]
 """
@@ -21,6 +23,12 @@ def main():
     ap.add_argument("--devices", type=int, default=40)
     ap.add_argument("--samples", type=int, default=12000)
     ap.add_argument("--noniid", action="store_true")
+    ap.add_argument("--backend", choices=("engine", "legacy"),
+                    default="engine",
+                    help="strategy-based engine (default) or legacy sim")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="engine cohort size (>0 = vectorized local "
+                         "training for the async methods)")
     args = ap.parse_args()
 
     iid = not args.noniid
@@ -41,6 +49,7 @@ def main():
         t0 = time.time()
         hist = run_method(method, data, parts, w0, iid=iid,
                           time_budget=args.budget, epochs=1, eval_every=4,
+                          backend=args.backend, cohort_size=args.cohort,
                           **kw)
         best = max(h.accuracy for h in hist)
         rows.append((method, hist[-1].round, best,

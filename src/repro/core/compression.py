@@ -76,15 +76,68 @@ def sparsify_quantize_dense(x: jax.Array, p_s: float, p_q: int,
     return dequantize_levels(levels, scale, p_q).astype(x.dtype) * mask
 
 
+def approx_topk_threshold(ax: jax.Array, p_s: float, iters: int = 12) -> jax.Array:
+    """Magnitude threshold keeping ~``p_s`` of ``ax`` (= |x|), via the same
+    fixed-iteration binary search the Pallas ``topk_quant`` kernel uses —
+    O(iters * n) vector compares instead of an O(n log n) sort, which is what
+    makes the vectorized cohort channel affordable."""
+    hi0 = jnp.max(ax) + 1e-12
+    lo0 = jnp.zeros((), jnp.float32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        keep = jnp.mean((ax >= mid).astype(jnp.float32)) > p_s
+        return jnp.where(keep, mid, lo), jnp.where(keep, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    return 0.5 * (lo + hi)
+
+
+def sparsify_quantize_threshold(x: jax.Array, p_s: float, p_q: int,
+                                iters: int = 12) -> jax.Array:
+    """Approximate in-graph channel: threshold sparsification (binary-search
+    threshold, not exact Top-K) + deterministic uniform quantization.
+
+    Same math as the Pallas kernel applied whole-tensor; the kept fraction is
+    within ~2^-iters (+ magnitude ties) of ``p_s``.  Used by the vectorized
+    cohort path where an exact per-device ``top_k`` would dominate runtime."""
+    if p_s >= 1.0 and p_q >= FLOAT_BITS:
+        return x
+    xf = x.astype(jnp.float32)
+    if p_s >= 1.0:
+        kept = xf
+        mask = jnp.ones_like(xf, bool)
+    else:
+        thr = approx_topk_threshold(jnp.abs(xf), p_s, iters)
+        mask = jnp.abs(xf) >= thr
+        kept = jnp.where(mask, xf, 0.0)
+    levels, scale = quantize_levels(kept, p_q)
+    return (dequantize_levels(levels, scale, p_q) * mask).astype(x.dtype)
+
+
 # ----------------------------------------------------------------------
 # packed wire format (protocol simulator; Alg. 3 / Alg. 4 faithful)
 # ----------------------------------------------------------------------
+def topk_count(n: int, p_s: float) -> int:
+    """Number of kept values for an ``n``-element tensor at rate ``p_s``."""
+    return max(1, int(round(p_s * n))) if p_s < 1.0 else n
+
+
+def _wire_bits(n: int, k: int, p_q: int) -> int:
+    """Packed size of ``k`` kept values out of ``n``: p_q bits/value, index
+    bits/value when sparse, one f32 scale."""
+    index_bits = max(1, math.ceil(math.log2(max(n, 2))))
+    vbits = min(p_q, FLOAT_BITS)
+    return k * (vbits + (index_bits if k < n else 0)) + FLOAT_BITS
+
+
 def compress_tensor(x: np.ndarray, p_s: float, p_q: int,
                     rng: Optional[np.random.RandomState] = None) -> Dict[str, Any]:
     x = np.asarray(x, np.float32)
     flat = x.reshape(-1)
     n = flat.size
-    k = max(1, int(round(p_s * n))) if p_s < 1.0 else n
+    k = topk_count(n, p_s)
     if k < n:
         idx = np.argpartition(np.abs(flat), n - k)[n - k:]
     else:
@@ -118,10 +171,10 @@ def decompress_tensor(c: Dict[str, Any]) -> np.ndarray:
 def tensor_wire_bits(c: Dict[str, Any], index_bits: Optional[int] = None) -> int:
     """Transmitted size: p_q bits/value + index bits/value + one f32 scale."""
     k = len(c["values"])
-    if index_bits is None:
-        index_bits = max(1, math.ceil(math.log2(max(c["n"], 2))))
-    vbits = min(c["p_q"], FLOAT_BITS)
-    return k * (vbits + (index_bits if k < c["n"] else 0)) + FLOAT_BITS
+    if index_bits is not None:
+        vbits = min(c["p_q"], FLOAT_BITS)
+        return k * (vbits + (index_bits if k < c["n"] else 0)) + FLOAT_BITS
+    return _wire_bits(c["n"], k, c["p_q"])
 
 
 def compress_pytree(tree: Any, p_s: float, p_q: int,
@@ -142,6 +195,23 @@ def pytree_wire_bytes(ctree: Any) -> int:
 
 def pytree_dense_bytes(tree: Any) -> int:
     return sum(x.size * 4 for x in jax.tree.leaves(tree))
+
+
+def expected_tensor_wire_bits(n: int, p_s: float, p_q: int) -> int:
+    """Wire size of an ``n``-element tensor under (p_s, p_q) — identical to
+    ``tensor_wire_bits`` after an actual compression, but computed from shape
+    alone (the packed format's size is value-independent).  Lets the deferred
+    cohort path schedule arrivals before training has produced the update."""
+    return _wire_bits(n, topk_count(n, p_s), p_q)
+
+
+def expected_pytree_wire_bytes(tree: Any, p_s: float, p_q: int) -> int:
+    """Shape-only ``pytree_wire_bytes`` (matches the dense-bytes fast path of
+    the simulator channel when no compression is active)."""
+    if p_s >= 1.0 and p_q >= FLOAT_BITS:
+        return pytree_dense_bytes(tree)
+    return sum(expected_tensor_wire_bits(x.size, p_s, p_q)
+               for x in jax.tree.leaves(tree)) // 8
 
 
 def roundtrip_pytree(tree: Any, p_s: float, p_q: int,

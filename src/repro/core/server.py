@@ -7,6 +7,7 @@ staleness-weighted aggregation of Eqs. 6-10.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, List, Optional, Tuple
 
@@ -21,11 +22,12 @@ class ServerConfig:
     alpha: float = 0.6          # mixing hyper-parameter (Eq. 9)
     a: float = 0.5              # staleness exponent (Eq. 6)
 
-    @property
+    # cached: the admission gate reads these on every event-loop iteration
+    @functools.cached_property
     def max_parallel(self) -> int:
         return max(1, math.ceil(self.n_devices * self.c_fraction))
 
-    @property
+    @functools.cached_property
     def cache_size(self) -> int:
         return max(1, math.ceil(self.n_devices * self.gamma))
 

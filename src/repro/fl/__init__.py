@@ -1,3 +1,8 @@
-from repro.fl.protocols import (best_acc_within, make_setup,
-                                profile_compression, run_method, time_to_acc)
-from repro.fl.simulator import FLSimulator, LogEntry, SimConfig
+from repro.fl.engine import (ChannelMeter, CohortTrainer, DeviceRegistry,
+                             FLEngine, SerialTrainer)
+from repro.fl.protocols import (METHODS, STRATEGIES, ProtocolStrategy,
+                                best_acc_within, make_setup, make_sim,
+                                make_strategy, profile_compression,
+                                run_method, time_to_acc)
+from repro.fl.simulator import (FLSimulator, LogEntry, ScenarioConfig,
+                                SimConfig, TierSpec)

@@ -1,0 +1,554 @@
+"""Layered event-driven FL engine: scheduler, device registry, channel
+accounting, pluggable protocol strategies, vectorized cohort execution.
+
+Mapping to the paper (TEASQ-Fed, Algs. 1-2):
+
+* **Alg. 1, server side (Distributor)** — ``FLEngine._handle_request``:
+  pops a device task request off the virtual-clock event heap and admission-
+  controls it through ``TeasqServer.try_dispatch`` (the C-fraction gate,
+  P < ceil(N*C)); rejected requests park in the ``waiting`` queue.
+* **Alg. 1, device side (local prox-SGD, Eq. 5)** — the trainer layer:
+  ``SerialTrainer`` runs ``repro.core.client.local_update`` per device
+  (bit-identical to the legacy ``FLSimulator``); ``CohortTrainer`` defers
+  training and executes whole cohorts of concurrently-training devices in a
+  single jitted scan over the einsum-formulated CNN
+  (``repro.models.cnn.cnn_cohort_loss``), one compiled program per padded
+  cohort bucket.
+* **Algs. 3-4 (wire compression)** — the channel layer: the serial path uses
+  the faithful packed codec (``roundtrip_pytree``); the cohort path applies
+  the in-graph threshold channel (``sparsify_quantize_threshold``) inside
+  the same jitted call and accounts bytes with the shape-only
+  ``expected_pytree_wire_bytes`` (the packed format's size is
+  value-independent, so arrivals can be scheduled before training runs).
+* **Alg. 2 (Receiver/Updater, Eqs. 6-10)** — ``FLEngine._handle_arrival``
+  delegates to the bound :class:`~repro.fl.protocols.ProtocolStrategy`:
+  the TEA/TEASQ family feeds ``TeasqServer.receive`` (cached
+  staleness-weighted aggregation); FedAsync/PORT/ASO-Fed mix immediately;
+  FedAvg/MOON run the synchronous straggler-bound loop instead.
+
+On top sits the scenario-injection layer (``ScenarioConfig``): per-device
+dropout, transient mid-round failure with task re-dispatch to the waiting
+queue, and heterogeneous compute/bandwidth tiers.  Scenario randomness comes
+from a dedicated RNG stream, so an inactive scenario leaves the event stream
+bit-identical to the legacy simulator — which is what the fixed-seed parity
+suite (tests/test_engine_parity.py) pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import local_update
+from repro.core.compression import (expected_pytree_wire_bytes,
+                                    pytree_dense_bytes, roundtrip_pytree,
+                                    sparsify_quantize_threshold)
+from repro.core.latency import (comm_latency, device_rates,
+                                sample_compute_latency)
+from repro.core.server import ServerConfig, TeasqServer
+from repro.fl.simulator import LogEntry, ScenarioConfig, SimConfig
+from repro.models.cnn import cnn_accuracy, cnn_cohort_loss, cnn_loss
+
+
+# ----------------------------------------------------------------------
+# Device registry + channel accounting
+# ----------------------------------------------------------------------
+class DeviceRegistry:
+    """Per-device simulation state: link rates, compute coefficients, tier
+    assignment, and liveness.  Draws from the engine RNG in exactly the
+    legacy ``FLSimulator.__init__`` order (rates, then a_k)."""
+
+    def __init__(self, cfg: SimConfig, rng: np.random.RandomState):
+        n = cfg.n_devices
+        self.cfg = cfg
+        self.down_rates, self.up_rates = device_rates(n, cfg.wireless, rng)
+        self.a_k = rng.uniform(cfg.compute.a_min, cfg.compute.a_max, n)
+        self.phi_k = np.full(n, cfg.compute.phi)
+        self.alive = np.ones(n, bool)
+        self.tier = np.zeros(n, np.int64)
+
+    def apply_tiers(self, tiers) -> None:
+        """Contiguous deterministic tier assignment by device index."""
+        n = len(self.alive)
+        start = 0
+        for i, t in enumerate(tiers):
+            stop = n if i == len(tiers) - 1 else min(
+                n, start + int(round(t.fraction * n)))
+            sl = slice(start, stop)
+            self.tier[sl] = i
+            self.a_k[sl] *= t.compute_scale
+            self.down_rates[sl] *= t.bandwidth_scale
+            self.up_rates[sl] *= t.bandwidth_scale
+            start = stop
+
+    def round_latency(self, k: int, bits_down: float, bits_up: float,
+                      n_batches: int, rng: np.random.RandomState
+                      ) -> Tuple[float, float, float]:
+        cfg = self.cfg
+        dl = comm_latency(bits_down, self.down_rates[k])
+        ul = comm_latency(bits_up, self.up_rates[k])
+        cp = sample_compute_latency(self.a_k[k], self.phi_k[k],
+                                    tau_b=n_batches * cfg.epochs
+                                    * 0.002 * cfg.batch_size, rng=rng)
+        return dl, cp, ul
+
+
+class ChannelMeter:
+    """Cumulative and per-transfer-max byte accounting for both directions."""
+
+    def __init__(self):
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self.max_up = 0
+        self.max_down = 0
+
+    def down(self, nbytes: int) -> None:
+        self.bytes_down += nbytes
+        self.max_down = max(self.max_down, nbytes)
+
+    def up(self, nbytes: int) -> None:
+        self.bytes_up += nbytes
+        self.max_up = max(self.max_up, nbytes)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    dispatches: int = 0
+    completions: int = 0
+    dropouts: int = 0
+    transient_failures: int = 0
+    redispatched: int = 0
+    flushes: int = 0
+    flushed_tasks: int = 0
+    completed_per_device: Optional[np.ndarray] = None
+
+
+# ----------------------------------------------------------------------
+# Trainers: serial (legacy-parity) and vectorized cohort
+# ----------------------------------------------------------------------
+class SerialTrainer:
+    """Trains one device at grant time — the rng-order-exact legacy path."""
+
+    deferred = False
+
+    def __init__(self, engine: "FLEngine"):
+        self.engine = engine
+
+    def train(self, k: int, w: Any) -> Tuple[Any, int]:
+        eng = self.engine
+        idx = eng.partitions[k]
+        x, y = eng.data["x_train"][idx], eng.data["y_train"][idx]
+        w_new, _, _ = local_update(
+            w, x, y, cnn_loss, epochs=eng.cfg.epochs,
+            batch_size=eng.cfg.batch_size, lr=eng.cfg.lr, mu=eng.cfg.mu,
+            rng=eng.rng)
+        return w_new, len(idx)
+
+
+@dataclasses.dataclass
+class PendingTask:
+    """A granted-but-not-yet-trained task in the deferred cohort buffer."""
+    k: int
+    version: int          # index into the flush's global-model version list
+    t0: int
+    p_s: float
+    p_q: int
+    n_k: int
+    bidx: np.ndarray      # (T, bs) minibatch sample indices
+    result: Optional[Tuple[Any, int]] = None
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "mu", "p_s", "p_q", "iters"))
+def _cohort_round(w_versions, vidx, xs, ys, didx, bidx, valid, *,
+                  lr: float, mu: float, p_s: float, p_q: int, iters: int):
+    """One fused cohort round: down-channel (per model version), E epochs of
+    prox-SGD for every device in the cohort (scan over steps, batched einsum
+    CNN), up-channel.  Shapes: w_versions leaves (V, ...); vidx/didx (C,);
+    xs/ys (N, n_max, ...); bidx (T, C, bs); valid (T, C)."""
+
+    def channel(tree):
+        return jax.tree.map(
+            lambda a: sparsify_quantize_threshold(a, p_s, p_q, iters), tree)
+
+    w_recv_v = jax.vmap(channel)(w_versions)
+    w_recv = jax.tree.map(lambda a: a[vidx], w_recv_v)
+    xd = xs[didx]
+    yd = ys[didx]
+
+    def step(params, sv):
+        idx, v = sv                                   # (C, bs), (C,)
+        imgs = jnp.take_along_axis(
+            xd, idx[:, :, None, None, None], axis=1)
+        labs = jnp.take_along_axis(yd, idx, axis=1)
+        grads = jax.grad(cnn_cohort_loss)(params, imgs, labs)
+
+        def upd(p, g, a):
+            vv = v.reshape((v.shape[0],) + (1,) * (p.ndim - 1))
+            return p - vv * lr * (g + mu * (p - a))
+
+        return jax.tree.map(upd, params, grads, w_recv), None
+
+    out, _ = jax.lax.scan(step, w_recv, (bidx, valid))
+    return jax.vmap(channel)(out)
+
+
+class CohortTrainer:
+    """Deferred vectorized execution: granted tasks buffer up and whole
+    cohorts train in one jitted call (padded to power-of-two buckets so jit's
+    shape cache stays small).  Device data is pre-stacked once; minibatch
+    permutations come from a dedicated RNG (the deferred path makes no
+    bit-parity promise, only distributional equivalence)."""
+
+    deferred = True
+
+    def __init__(self, engine: "FLEngine", cohort_size: int,
+                 channel_iters: int = 12):
+        self.engine = engine
+        self.cohort_size = max(1, cohort_size)
+        self.channel_iters = channel_iters
+        self.perm_rng = np.random.RandomState(engine.cfg.seed + 0x9E3779)
+        self._serial = SerialTrainer(engine)   # sync-loop fallback
+        self.pending: List[PendingTask] = []
+        self._versions: List[Any] = []
+        self._version_ids: Dict[int, int] = {}
+        parts = engine.partitions
+        n_max = max(len(idx) for idx in parts)
+        x = engine.data["x_train"]
+        xs = np.zeros((len(parts), n_max) + x.shape[1:], np.float32)
+        ys = np.zeros((len(parts), n_max), np.int32)
+        for k, idx in enumerate(parts):
+            xs[k, :len(idx)] = x[idx]
+            ys[k, :len(idx)] = engine.data["y_train"][idx]
+        self.xs = jnp.asarray(xs)
+        self.ys = jnp.asarray(ys)
+        # two padded-shape buckets: full cohorts and a small one for tail
+        # flushes — each bucket costs one XLA compile of _cohort_round
+        self.buckets = sorted({max(1, self.cohort_size // 4),
+                               self.cohort_size})
+
+    # -- sync-loop fallback -------------------------------------------------
+    def train(self, k: int, w: Any) -> Tuple[Any, int]:
+        return self._serial.train(k, w)
+
+    # -- deferred protocol --------------------------------------------------
+    def _version_of(self, w: Any) -> int:
+        vid = self._version_ids.get(id(w))
+        if vid is None:
+            vid = len(self._versions)
+            self._versions.append(w)       # keeps the ref alive => id stable
+            self._version_ids[id(w)] = vid
+        return vid
+
+    def submit(self, k: int, w_t: Any, t0: int, p_s: float,
+               p_q: int) -> PendingTask:
+        cfg = self.engine.cfg
+        n_k = len(self.engine.partitions[k])
+        bs = cfg.batch_size
+        steps = (n_k - bs) // bs + 1 if n_k >= bs else 0
+        rows = []
+        for _ in range(cfg.epochs):
+            order = self.perm_rng.permutation(n_k)
+            for s in range(steps):
+                rows.append(order[s * bs:(s + 1) * bs])
+        bidx = (np.asarray(rows, np.int32) if rows
+                else np.zeros((0, bs), np.int32))
+        task = PendingTask(k, self._version_of(w_t), t0, p_s, p_q, n_k, bidx)
+        self.pending.append(task)
+        if len(self.pending) >= self.cohort_size:
+            self.flush()
+        return task
+
+    def result(self, task: PendingTask) -> Tuple[Any, int]:
+        if task.result is None:
+            self.flush()
+        assert task.result is not None
+        return task.result
+
+    @staticmethod
+    def _pad_pow2(n: int) -> int:
+        p = 1
+        while p < n:
+            p *= 2
+        return p
+
+    def flush(self) -> None:
+        tasks, self.pending = self.pending, []
+        versions, self._versions = self._versions, []
+        self._version_ids = {}
+        if not tasks:
+            return
+        groups: Dict[Tuple[float, int], List[PendingTask]] = {}
+        for t in tasks:
+            groups.setdefault((t.p_s, t.p_q), []).append(t)
+        # pad the version axis to a power of two (repeat the first version)
+        # so the jitted program's V dimension comes from a small bucket set
+        versions = versions + [versions[0]] * (self._pad_pow2(len(versions))
+                                               - len(versions))
+        w_versions = jax.tree.map(lambda *ls: jnp.stack(ls), *versions)
+        for (p_s, p_q), group in groups.items():
+            self._flush_group(group, w_versions, p_s, p_q)
+        self.engine.stats.flushes += 1
+        self.engine.stats.flushed_tasks += len(tasks)
+
+    def _flush_group(self, group: List[PendingTask], w_versions, p_s: float,
+                     p_q: int) -> None:
+        cfg = self.engine.cfg
+        c = len(group)
+        c_pad = next(b for b in self.buckets if b >= c) if \
+            c <= self.buckets[-1] else c
+        # pad the scan length to a power of two too (ragged partitions give
+        # per-device step counts; valid=0 masks the padding) — otherwise
+        # every distinct t_max recompiles the fused round
+        t_max = max(t.bidx.shape[0] for t in group)
+        t_max = self._pad_pow2(t_max) if t_max else 0
+        bs = cfg.batch_size
+        bidx = np.zeros((c_pad, t_max, bs), np.int32)
+        valid = np.zeros((c_pad, t_max), np.float32)
+        vidx = np.zeros(c_pad, np.int32)
+        didx = np.zeros(c_pad, np.int32)
+        for i, t in enumerate(group):
+            ti = t.bidx.shape[0]
+            bidx[i, :ti] = t.bidx
+            valid[i, :ti] = 1.0
+            vidx[i] = t.version
+            didx[i] = t.k
+        w_up = _cohort_round(
+            w_versions, jnp.asarray(vidx), self.xs, self.ys,
+            jnp.asarray(didx), jnp.asarray(np.swapaxes(bidx, 0, 1)),
+            jnp.asarray(np.swapaxes(valid, 0, 1)),
+            lr=cfg.lr, mu=cfg.mu, p_s=p_s, p_q=p_q,
+            iters=self.channel_iters)
+        # one bulk device->host transfer per leaf; per-task results are then
+        # free numpy views (a per-task jnp slice costs an eager dispatch,
+        # which dominated the flush at large N)
+        w_up_np = jax.tree.map(np.asarray, w_up)
+        for i, t in enumerate(group):
+            t.result = (jax.tree.map(lambda a, i=i: a[i], w_up_np), t.n_k)
+
+
+# ----------------------------------------------------------------------
+# The engine
+# ----------------------------------------------------------------------
+class FLEngine:
+    """Event-driven virtual-clock FL engine with pluggable protocol
+    strategies.  Drop-in for the legacy ``FLSimulator``: with default knobs
+    (no scenario, ``cohort_size=0``) it consumes the seeded RNG in the exact
+    legacy order and reproduces its ``LogEntry`` history bit-for-bit."""
+
+    def __init__(self, data: Dict[str, np.ndarray],
+                 partitions: List[np.ndarray], w_init: Any, cfg: SimConfig,
+                 strategy: Optional[Any] = None):
+        self.cfg = cfg
+        self.data = data
+        self.partitions = partitions
+        self.rng = np.random.RandomState(cfg.seed)
+        n = cfg.n_devices
+        assert len(partitions) == n
+        self.devices = DeviceRegistry(cfg, self.rng)
+        self.server = TeasqServer(w_init, ServerConfig(
+            n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
+        self.channel = ChannelMeter()
+        self.prev_local: Dict[int, Any] = {}      # MOON per-device state
+        self._eval = jax.jit(cnn_accuracy)
+        self.history: List[LogEntry] = []
+        self.stats = EngineStats(completed_per_device=np.zeros(n, np.int64))
+
+        if strategy is None:
+            from repro.fl.protocols import make_strategy
+            strategy = make_strategy(cfg.method, cfg)
+        self.strategy = strategy
+
+        self.scenario: Optional[ScenarioConfig] = cfg.scenario
+        self.scenario_rng = np.random.RandomState(
+            (cfg.seed + 0x5CE7A710) % (2 ** 31))
+        if self.scenario is not None and self.scenario.tiers:
+            self.devices.apply_tiers(self.scenario.tiers)
+
+        self.trainer = (CohortTrainer(self, cfg.cohort_size,
+                                      cfg.cohort_channel_iters)
+                        if cfg.cohort_size > 0 else SerialTrainer(self))
+
+    # -- shared helpers ----------------------------------------------------
+    def _channel_roundtrip(self, tree: Any, p_s: float,
+                           p_q: int) -> Tuple[Any, int]:
+        if p_s >= 1.0 and p_q >= 32:
+            return tree, pytree_dense_bytes(tree)
+        return roundtrip_pytree(tree, p_s, p_q, self.rng)
+
+    def resolve_payload(self, payload: Any) -> Tuple[Any, int]:
+        """(w_local, n_k) from either an eager tuple or a PendingTask."""
+        if isinstance(payload, PendingTask):
+            return self.trainer.result(payload)
+        return payload
+
+    def evaluate(self) -> float:
+        xs, ys = self.data["x_test"], self.data["y_test"]
+        accs = []
+        for s in range(0, len(ys), 2000):
+            accs.append(float(self._eval(self.server.w,
+                                         jnp.asarray(xs[s:s + 2000]),
+                                         jnp.asarray(ys[s:s + 2000]))))
+        return float(np.mean(accs))
+
+    def _log(self, time: float) -> None:
+        self.history.append(LogEntry(
+            time, self.server.t, self.evaluate(), self.channel.bytes_up,
+            self.channel.bytes_down, self.channel.max_up,
+            self.channel.max_down))
+
+    # -- entry point -------------------------------------------------------
+    def run(self, time_budget: float = 300.0, max_rounds: int = 10 ** 9,
+            eval_every: int = 1) -> List[LogEntry]:
+        if not self.strategy.event_driven:
+            return self._run_sync(time_budget, max_rounds, eval_every)
+        return self._run_async(time_budget, max_rounds, eval_every)
+
+    # -- asynchronous event loop (Algs. 1-2) -------------------------------
+    def _run_async(self, time_budget: float, max_rounds: int,
+                   eval_every: int) -> List[LogEntry]:
+        cfg = self.cfg
+        events: List[Tuple[float, int, str, int, Any, int]] = []
+        seq = 0
+
+        def push(t, kind, k, payload=None, h=0):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, k, payload, h))
+            seq += 1
+
+        waiting: List[int] = []
+        for k in range(cfg.n_devices):
+            push(self.rng.uniform(0, 0.05), "request", k)
+
+        self._log(0.0)
+        now = 0.0
+        while events:
+            now, _, kind, k, payload, h = heapq.heappop(events)
+            if now > time_budget or self.server.t >= max_rounds:
+                break
+            if kind == "request":
+                self._handle_request(now, k, push, waiting)
+            elif kind == "failure":
+                self._handle_failure(now, k, payload, push, waiting)
+            else:
+                self._handle_arrival(now, k, payload, h, eval_every, push,
+                                     waiting)
+        self._log(min(now, time_budget))
+        return self.history
+
+    def _drain_waiting(self, now, push, waiting) -> None:
+        # re-issue at most free-slot many waiting requests: re-pushing the
+        # whole queue is FIFO-equivalent (ungranted requests re-queue in
+        # order) but costs O(waiting) events per freed slot — quadratic at
+        # large N
+        free = self.server.cfg.max_parallel - self.server.active
+        for _ in range(min(free, len(waiting))):
+            push(now, "request", waiting.pop(0))
+
+    def _handle_request(self, now, k, push, waiting) -> None:
+        cfg = self.cfg
+        if not self.devices.alive[k]:
+            return
+        grant = self.server.try_dispatch()
+        if grant is None:
+            waiting.append(k)
+            return
+        self.stats.dispatches += 1
+        w_t, t0 = grant
+        p_s, p_q = self.strategy.compression_at(t0)
+
+        if self.scenario is not None and self.scenario.active:
+            scen = self.scenario
+            u = self.scenario_rng.random_sample()
+            if u < scen.dropout_prob + scen.failure_prob:
+                mode = "dropout" if u < scen.dropout_prob else "transient"
+                nbytes_down = expected_pytree_wire_bytes(w_t, p_s, p_q)
+                self.channel.down(nbytes_down)
+                n_k = len(self.partitions[k])
+                n_batches = max(1, n_k // cfg.batch_size)
+                dl, cp, _ = self.devices.round_latency(
+                    k, nbytes_down * 8, 0.0, n_batches, self.scenario_rng)
+                fail_at = now + self.scenario_rng.uniform(0.0, dl + cp)
+                push(fail_at, "failure", k, mode)
+                return
+
+        if self.trainer.deferred:
+            nbytes_down = expected_pytree_wire_bytes(w_t, p_s, p_q)
+            self.channel.down(nbytes_down)
+            task = self.trainer.submit(k, w_t, t0, p_s, p_q)
+            nbytes_up = nbytes_down   # same tree shapes and (p_s, p_q)
+            self.channel.up(nbytes_up)
+            n_batches = max(1, task.n_k // cfg.batch_size)
+            dl, cp, ul = self.devices.round_latency(
+                k, nbytes_down * 8, nbytes_up * 8, n_batches, self.rng)
+            push(now + dl + cp + ul, "arrival", k, task, t0)
+            return
+
+        w_recv, nbytes_down = self._channel_roundtrip(w_t, p_s, p_q)
+        self.channel.down(nbytes_down)
+        w_local, n_k = self.strategy.local_train(self, k, w_recv)
+        w_up, nbytes_up = self._channel_roundtrip(w_local, p_s, p_q)
+        self.channel.up(nbytes_up)
+        n_batches = max(1, n_k // cfg.batch_size)
+        dl, cp, ul = self.devices.round_latency(
+            k, nbytes_down * 8, nbytes_up * 8, n_batches, self.rng)
+        push(now + dl + cp + ul, "arrival", k, (w_up, n_k), t0)
+
+    def _handle_failure(self, now, k, mode, push, waiting) -> None:
+        """Mid-round device loss: free the slot, re-dispatch the capacity to
+        the waiting queue; transient failures retry after a backoff."""
+        self.server.active = max(0, self.server.active - 1)
+        if mode == "dropout":
+            self.devices.alive[k] = False
+            self.stats.dropouts += 1
+        else:
+            self.stats.transient_failures += 1
+            push(now + self.scenario.retry_backoff, "request", k)
+        if waiting:
+            self.stats.redispatched += 1
+        self._drain_waiting(now, push, waiting)
+
+    def _handle_arrival(self, now, k, payload, h, eval_every, push,
+                        waiting) -> None:
+        done_round = self.strategy.on_arrival(self, now, k, payload, h)
+        self.stats.completions += 1
+        self.stats.completed_per_device[k] += 1
+        if done_round and self.server.t % eval_every == 0:
+            self._log(now)
+        if self.devices.alive[k]:
+            push(now, "request", k)
+        self._drain_waiting(now, push, waiting)
+
+    # -- synchronous loop (FedAvg / MOON) ----------------------------------
+    def _run_sync(self, time_budget: float, max_rounds: int,
+                  eval_every: int) -> List[LogEntry]:
+        cfg = self.cfg
+        now = 0.0
+        self._log(now)
+        per_round = min(cfg.devices_per_round, cfg.n_devices)
+        while now < time_budget and self.server.t < max_rounds:
+            sel = self.rng.choice(cfg.n_devices, per_round, replace=False)
+            updates, weights, latencies = [], [], []
+            for k in sel:
+                nbytes = pytree_dense_bytes(self.server.w)
+                self.channel.down(nbytes)
+                w_local, n_k = self.strategy.local_train(self, k,
+                                                         self.server.w)
+                self.channel.up(nbytes)
+                n_batches = max(1, n_k // cfg.batch_size)
+                dl, cp, ul = self.devices.round_latency(
+                    k, nbytes * 8, nbytes * 8, n_batches, self.rng)
+                latencies.append(dl + cp + ul)
+                updates.append(w_local)
+                weights.append(n_k)
+            self.server.w = self.strategy.aggregate(self, updates, weights)
+            self.server.t += 1
+            now += max(latencies)        # straggler-bound synchronous round
+            if self.server.t % eval_every == 0:
+                self._log(now)
+        return self.history

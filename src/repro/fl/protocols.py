@@ -1,24 +1,208 @@
-"""Protocol runners: one-call drivers for each method in the paper's §5."""
+"""Protocol strategies + one-call drivers for each method in the paper's §5.
+
+The strategy interface is the pluggable seam of the FL engine
+(``repro.fl.engine.FLEngine``): each protocol is a small class that answers
+three questions — what compression does a round-``t`` dispatch use
+(Algs. 3-4), how does a device train locally (Alg. 1 device side), and what
+happens when an update arrives at the server (Alg. 2 for the TEA family,
+immediate mixing for the async baselines, the straggler-bound synchronous
+loop for FedAvg/MOON).  ``make_strategy`` resolves a method name from
+``METHODS`` to a bound instance; registering a new protocol is one subclass
+plus one registry entry.
+"""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional
+import abc
+from typing import Any, ClassVar, Dict, List, Optional, Tuple, Type
 
 import jax
 import numpy as np
 
 from repro.core.compression import roundtrip_pytree
-from repro.core.dynamic import (DEFAULT_SET_Q, DEFAULT_SET_S, greedy_search,
-                                make_schedule)
+from repro.core.dynamic import greedy_search
+from repro.core.staleness import staleness_weight
 from repro.data.synthetic import (make_fmnist_like, partition_iid,
                                   partition_noniid_classes)
-from repro.fl.simulator import FLSimulator, LogEntry, SimConfig
+from repro.fl.simulator import (FLSimulator, LogEntry, SimConfig,
+                                moon_local_train)
 from repro.models.cnn import cnn_accuracy, init_cnn
 
 METHODS = ("fedavg", "fedasync", "tea", "teas", "teaq", "teastatic",
            "teasq", "moon", "port", "asofed")
 
 
+# ----------------------------------------------------------------------
+# Strategy interface
+# ----------------------------------------------------------------------
+class ProtocolStrategy(abc.ABC):
+    """One FL protocol, bound to a SimConfig.  Engine hooks:
+
+    * ``compression_at(t)`` — (p_s, p_q) for a task dispatched at round t.
+    * ``local_train(engine, k, w)`` — device-side update; defaults to the
+      engine's trainer (serial prox-SGD or vectorized cohort).
+    * ``on_arrival(engine, now, k, payload, h)`` — server-side handling of a
+      completed upload; returns True when an aggregation round finished.
+    * ``aggregate(engine, updates, weights)`` — synchronous-round merge
+      (only used when ``event_driven`` is False).
+    """
+
+    method: ClassVar[str] = ""
+    event_driven: ClassVar[bool] = True
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+
+    def compression_at(self, t: int) -> Tuple[float, int]:
+        return 1.0, 32
+
+    def local_train(self, engine, k: int, w: Any) -> Tuple[Any, int]:
+        return engine.trainer.train(k, w)
+
+    def on_arrival(self, engine, now: float, k: int, payload: Any,
+                   h: int) -> bool:
+        raise NotImplementedError(
+            f"{self.method} is not an event-driven protocol")
+
+    def aggregate(self, engine, updates: List[Any],
+                  weights: List[int]) -> Any:
+        raise NotImplementedError(
+            f"{self.method} does not run the synchronous loop")
+
+
+# -- TEA-Fed family: cached staleness-weighted aggregation (Alg. 2) -------
+class TeaStrategy(ProtocolStrategy):
+    """TEA-Fed: asynchronous cached aggregation, no wire compression."""
+
+    method = "tea"
+
+    def on_arrival(self, engine, now, k, payload, h) -> bool:
+        w_local, n_k = engine.resolve_payload(payload)
+        return engine.server.receive(w_local, h, n_k)
+
+
+class TeasStrategy(TeaStrategy):
+    method = "teas"
+
+    def compression_at(self, t):
+        return self.cfg.p_s, 32
+
+
+class TeaqStrategy(TeaStrategy):
+    method = "teaq"
+
+    def compression_at(self, t):
+        return 1.0, self.cfg.p_q
+
+
+class TeaStaticStrategy(TeaStrategy):
+    method = "teastatic"
+
+    def compression_at(self, t):
+        return self.cfg.p_s, self.cfg.p_q
+
+
+class TeasqStrategy(TeaStaticStrategy):
+    """Full TEASQ-Fed: Alg. 5 decay schedule when provided, else static."""
+
+    method = "teasq"
+
+    def compression_at(self, t):
+        if self.cfg.schedule is not None:
+            return self.cfg.schedule.at_round(t)
+        return self.cfg.p_s, self.cfg.p_q
+
+
+# -- immediate-update async baselines -------------------------------------
+class FedAsyncStrategy(ProtocolStrategy):
+    """FedAsync (Xie et al.): mix every arrival straight into the global
+    model with a staleness-decayed weight; every arrival is a round."""
+
+    method = "fedasync"
+
+    def mixing_weight(self, staleness: int) -> float:
+        cfg = self.cfg
+        stale = min(staleness, cfg.max_staleness)   # capped poly decay
+        return cfg.alpha * float(staleness_weight(stale, cfg.a))
+
+    def on_arrival(self, engine, now, k, payload, h) -> bool:
+        w_local, _ = engine.resolve_payload(payload)
+        srv = engine.server
+        srv.active = max(0, srv.active - 1)
+        a_t = self.mixing_weight(srv.t - h)
+        srv.w = jax.tree.map(lambda wl, wg: a_t * wl + (1 - a_t) * wg,
+                             w_local, srv.w)
+        srv.t += 1
+        return True
+
+
+class PortStrategy(FedAsyncStrategy):
+    method = "port"
+
+    def mixing_weight(self, staleness):   # unbounded staleness, harder decay
+        return self.cfg.alpha * (staleness + 1.0) ** -1.0
+
+
+class AsoFedStrategy(FedAsyncStrategy):
+    method = "asofed"
+
+    def mixing_weight(self, staleness):   # linear decay
+        return self.cfg.alpha / (1.0 + staleness)
+
+
+# -- synchronous baselines -------------------------------------------------
+class FedAvgStrategy(ProtocolStrategy):
+    """Synchronous FedAvg: sample a round cohort, wait for the straggler,
+    merge by sample-count weights."""
+
+    method = "fedavg"
+    event_driven = False
+
+    def aggregate(self, engine, updates, weights):
+        wts = np.asarray(weights, np.float32)
+        wts /= wts.sum()
+        return jax.tree.map(
+            lambda *ls: sum(w * l for w, l in zip(wts, ls)), *updates)
+
+
+class MoonStrategy(FedAvgStrategy):
+    """MOON (Li et al., CVPR'21): FedAvg round structure with a model-
+    contrastive local objective against the device's previous model."""
+
+    method = "moon"
+
+    def local_train(self, engine, k, w_glob):
+        cfg = self.cfg
+        idx = engine.partitions[k]
+        x = engine.data["x_train"][idx]
+        y = engine.data["y_train"][idx]
+        prev = engine.prev_local.get(k, w_glob)
+        params = moon_local_train(w_glob, prev, x, y, epochs=cfg.epochs,
+                                  batch_size=cfg.batch_size, lr=cfg.lr,
+                                  rng=engine.rng)
+        engine.prev_local[k] = params
+        return params, len(idx)
+
+
+STRATEGIES: Dict[str, Type[ProtocolStrategy]] = {
+    cls.method: cls for cls in (
+        TeaStrategy, TeasStrategy, TeaqStrategy, TeaStaticStrategy,
+        TeasqStrategy, FedAsyncStrategy, PortStrategy, AsoFedStrategy,
+        FedAvgStrategy, MoonStrategy)
+}
+assert set(STRATEGIES) == set(METHODS)
+
+
+def make_strategy(method: str, cfg: SimConfig) -> ProtocolStrategy:
+    try:
+        return STRATEGIES[method](cfg)
+    except KeyError:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"expected one of {sorted(STRATEGIES)}") from None
+
+
+# ----------------------------------------------------------------------
+# One-call drivers
+# ----------------------------------------------------------------------
 def make_setup(n_devices: int = 100, iid: bool = True, seed: int = 0,
                n_train: int = 60000, n_test: int = 10000):
     data = make_fmnist_like(n_train, n_test, seed=seed)
@@ -30,6 +214,17 @@ def make_setup(n_devices: int = 100, iid: bool = True, seed: int = 0,
     return data, parts, w0
 
 
+def make_sim(data, parts, w0, cfg: SimConfig, backend: str = "engine"):
+    """Build a runnable simulator: the strategy-based engine (default) or
+    the legacy monolithic FLSimulator (kept as the parity reference)."""
+    if backend == "legacy":
+        return FLSimulator(data, parts, w0, cfg)
+    if backend != "engine":
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.fl.engine import FLEngine
+    return FLEngine(data, parts, w0, cfg)
+
+
 def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
                  **kw) -> Any:
     """Briefly train a global model (TEA protocol) and return its weights —
@@ -38,7 +233,7 @@ def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
     search would pick maximum compression)."""
     cfg = SimConfig(method="tea", n_devices=len(parts), seed=seed,
                     **{k: v for k, v in kw.items() if hasattr(SimConfig, k)})
-    sim = FLSimulator(data, parts, w0, cfg)
+    sim = make_sim(data, parts, w0, cfg)
     sim.run(time_budget=time_budget, eval_every=10 ** 9)
     return sim.server.w
 
@@ -63,12 +258,13 @@ def run_method(method: str, data, parts, w0, *, iid: bool = True,
                c_fraction: float = 0.1, mu: float = 0.01, alpha: float = 0.6,
                p_s: float = 0.25, p_q: int = 8,
                schedule=None, eval_every: int = 1,
+               backend: str = "engine",
                **overrides) -> List[LogEntry]:
     cfg = SimConfig(method=method, n_devices=len(parts),
                     c_fraction=c_fraction, mu=mu, alpha=alpha,
                     p_s=p_s, p_q=p_q, schedule=schedule, seed=seed,
                     **overrides)
-    sim = FLSimulator(data, parts, w0, cfg)
+    sim = make_sim(data, parts, w0, cfg, backend=backend)
     return sim.run(time_budget=time_budget, eval_every=eval_every)
 
 

@@ -55,6 +55,61 @@ def _moon_sgd_step(params, batch, lr: float, mu_con: float, tau: float):
     return jax.tree.map(lambda p, g: p - lr * g, params, grads), loss
 
 
+def moon_local_train(w_glob: Any, prev: Any, x, y, *, epochs: int,
+                     batch_size: int, lr: float,
+                     rng: np.random.RandomState) -> Any:
+    """MOON device-side update: E epochs of `_moon_sgd_step` minibatches.
+    Shared by the legacy simulator and the engine's MoonStrategy so the two
+    backends cannot drift apart."""
+    params = w_glob
+    for _ in range(epochs):
+        order = rng.permutation(len(y))
+        for s in range(0, len(y) - batch_size + 1, batch_size):
+            sel = order[s:s + batch_size]
+            batch = {"images": jnp.asarray(x[sel]),
+                     "labels": jnp.asarray(y[sel]),
+                     "glob": w_glob, "prev": prev}
+            params, _ = _moon_sgd_step(params, batch, lr,
+                                       mu_con=1.0, tau=0.5)
+    return params
+
+
+@dataclasses.dataclass
+class TierSpec:
+    """One heterogeneity tier: a fraction of the fleet with scaled compute
+    speed (multiplies the shifted-exponential coefficient a_k; >1 = slower)
+    and scaled link bandwidth (multiplies both directions' rates)."""
+    fraction: float
+    compute_scale: float = 1.0
+    bandwidth_scale: float = 1.0
+    name: str = ""
+
+
+@dataclasses.dataclass
+class ScenarioConfig:
+    """Scenario-injection knobs, consumed by ``repro.fl.engine.FLEngine``
+    (the legacy ``FLSimulator`` ignores them).  All randomness is drawn from
+    a dedicated scenario RNG so that an all-zero ScenarioConfig leaves the
+    engine's event stream bit-identical to the no-scenario run.
+
+    * ``dropout_prob``: per-task probability the device leaves the fleet
+      mid-round (permanent); its slot is freed and re-dispatched.
+    * ``failure_prob``: per-task probability of a transient mid-round crash;
+      the device retries after ``retry_backoff`` simulated seconds.
+    * ``tiers``: heterogeneous compute/bandwidth tiers assigned contiguously
+      by device index according to each tier's ``fraction``.
+    """
+    dropout_prob: float = 0.0
+    failure_prob: float = 0.0
+    retry_backoff: float = 1.0
+    tiers: Optional[List[TierSpec]] = None
+
+    @property
+    def active(self) -> bool:
+        return (self.dropout_prob > 0.0 or self.failure_prob > 0.0
+                or bool(self.tiers))
+
+
 @dataclasses.dataclass
 class SimConfig:
     # teasq | teastatic | teas | teaq | tea | fedavg | fedasync
@@ -82,6 +137,13 @@ class SimConfig:
     devices_per_round: int = 10
     max_staleness: int = 4
     seed: int = 0
+    # engine-only knobs (ignored by the legacy FLSimulator):
+    # cohort_size > 0 switches FLEngine to the vectorized cohort trainer
+    # (deferred training, one jitted call per padded cohort); scenario
+    # injects dropout / mid-round failure / heterogeneity tiers.
+    cohort_size: int = 0
+    cohort_channel_iters: int = 12   # threshold binary-search iterations
+    scenario: Optional[ScenarioConfig] = None
 
 
 @dataclasses.dataclass
@@ -149,17 +211,9 @@ class FLSimulator:
 
     def _train_device_moon(self, k: int, w_glob: Any, x, y) -> Any:
         prev = self.prev_local.get(k, w_glob)
-        params = w_glob
-        bs = self.cfg.batch_size
-        for _ in range(self.cfg.epochs):
-            order = self.rng.permutation(len(y))
-            for s in range(0, len(y) - bs + 1, bs):
-                sel = order[s:s + bs]
-                batch = {"images": jnp.asarray(x[sel]),
-                         "labels": jnp.asarray(y[sel]),
-                         "glob": w_glob, "prev": prev}
-                params, _ = _moon_sgd_step(params, batch, self.cfg.lr,
-                                           mu_con=1.0, tau=0.5)
+        params = moon_local_train(w_glob, prev, x, y, epochs=self.cfg.epochs,
+                                  batch_size=self.cfg.batch_size,
+                                  lr=self.cfg.lr, rng=self.rng)
         self.prev_local[k] = params
         return params
 
@@ -223,7 +277,8 @@ class FLSimulator:
         self._log(0.0)
         fedasync = cfg.method in ("fedasync", "port", "asofed")
 
-        while events:
+        now = 0.0   # the heap can be empty (n_devices=0) or the first pop
+        while events:  # can exceed time_budget; the final log still needs now
             now, _, kind, k, payload, h = heapq.heappop(events)
             if now > time_budget or self.server.t >= max_rounds:
                 break
@@ -260,7 +315,10 @@ class FLSimulator:
                 if done_round and self.server.t % eval_every == 0:
                     self._log(now)
                 push(now, "request", k)
-                while waiting and self.server.active < self.server.cfg.max_parallel:
+                # FIFO-equivalent to re-pushing the whole queue, without the
+                # O(waiting) event churn per freed slot
+                free = self.server.cfg.max_parallel - self.server.active
+                for _ in range(min(free, len(waiting))):
                     push(now, "request", waiting.pop(0))
         self._log(min(now, time_budget))
         return self.history
@@ -271,9 +329,9 @@ class FLSimulator:
         cfg = self.cfg
         now = 0.0
         self._log(now)
+        per_round = min(cfg.devices_per_round, cfg.n_devices)
         while now < time_budget and self.server.t < max_rounds:
-            sel = self.rng.choice(cfg.n_devices, cfg.devices_per_round,
-                                  replace=False)
+            sel = self.rng.choice(cfg.n_devices, per_round, replace=False)
             updates, weights, latencies = [], [], []
             for k in sel:
                 nbytes = pytree_dense_bytes(self.server.w)

@@ -1,0 +1,100 @@
+"""Compression invariants that hold without hypothesis (the property-test
+module tests/test_compression.py skips when hypothesis is absent):
+wire-size monotonicity in (p_s, p_q), lossless round trip at the identity
+point, shape-only size prediction, and Pallas-kernel-vs-dense parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (compress_pytree, expected_pytree_wire_bytes,
+                                    pytree_dense_bytes, pytree_wire_bytes,
+                                    roundtrip_pytree, sparsify_quantize_dense,
+                                    sparsify_quantize_threshold)
+from repro.kernels.topk_quant import dequant, topk_quant
+from repro.models.cnn import init_cnn
+
+pytestmark = pytest.mark.smoke
+
+
+@pytest.fixture(scope="module")
+def tree():
+    return init_cnn(jax.random.PRNGKey(7))
+
+
+def test_wire_bytes_monotone_in_ps_and_pq(tree):
+    rng = np.random.RandomState(0)
+    sizes_s = [pytree_wire_bytes(compress_pytree(tree, p_s, 8, rng))
+               for p_s in (0.01, 0.05, 0.1, 0.25, 0.5)]
+    assert sizes_s == sorted(sizes_s)
+    assert sizes_s[0] < sizes_s[-1]
+    sizes_q = [pytree_wire_bytes(compress_pytree(tree, 0.25, p_q, rng))
+               for p_q in (4, 8, 16, 32)]
+    assert sizes_q == sorted(sizes_q)
+    assert sizes_q[0] < sizes_q[-1]
+
+
+def test_roundtrip_identity_at_no_compression(tree):
+    w2, nbytes = roundtrip_pytree(tree, 1.0, 32, np.random.RandomState(0))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(w2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # packed framing overhead only (one f32 scale per tensor)
+    dense = pytree_dense_bytes(tree)
+    assert dense <= nbytes <= dense + 4 * len(jax.tree.leaves(tree))
+
+
+def test_expected_wire_bytes_matches_actual(tree):
+    """The deferred cohort path schedules arrivals from the shape-only size;
+    it must agree exactly with the packed codec's accounting."""
+    rng = np.random.RandomState(0)
+    for p_s, p_q in [(0.25, 8), (0.5, 16), (1.0, 8), (0.1, 32), (1.0, 32)]:
+        expected = expected_pytree_wire_bytes(tree, p_s, p_q)
+        if p_s >= 1.0 and p_q >= 32:
+            assert expected == pytree_dense_bytes(tree)   # simulator fast path
+        else:
+            actual = pytree_wire_bytes(compress_pytree(tree, p_s, p_q, rng))
+            assert expected == actual, (p_s, p_q)
+
+
+@pytest.mark.parametrize("p_s,bits", [(0.25, 8), (0.1, 8), (0.5, 4)])
+def test_pallas_kernel_parity_with_dense(p_s, bits):
+    """topk_quant + dequant vs the dense in-graph operator, one block so the
+    kernel's block-local threshold approximates the same global Top-K."""
+    rng = np.random.RandomState(42)
+    x = jnp.asarray(rng.randn(4096).astype(np.float32))
+    dense = np.asarray(sparsify_quantize_dense(x, p_s, bits))
+    lv, sc = topk_quant(x, p_s=p_s, bits=bits, block=4096)
+    kernel = np.asarray(dequant(lv, sc, bits, 4096, (4096,)))
+
+    kept_dense = (dense != 0).mean()
+    kept_kernel = (kernel != 0).mean()
+    # explicit kept-fraction tolerance: binary-search threshold resolution
+    # (2^-16 of the magnitude range) plus ties
+    assert abs(kept_kernel - p_s) < 0.02
+    assert abs(kept_dense - kept_kernel) < 0.02
+    # where both keep a value they agree up to one quantization level
+    both = (dense != 0) & (kernel != 0)
+    assert both.mean() > p_s - 0.02
+    level = float(np.abs(x).max()) / (2 ** (bits - 1) - 1)
+    assert np.max(np.abs(dense[both] - kernel[both])) <= level + 1e-6
+
+
+@pytest.mark.parametrize("p_s,p_q", [(0.25, 8), (1.0, 8), (0.5, 32)])
+def test_threshold_channel_parity_with_dense(p_s, p_q):
+    """The engine's vectorized channel (binary-search threshold) must track
+    the exact dense operator within the documented kept-fraction tolerance."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(8192).astype(np.float32))
+    dense = np.asarray(sparsify_quantize_dense(x, p_s, p_q))
+    approx = np.asarray(sparsify_quantize_threshold(x, p_s, p_q, iters=12))
+    kept_a = (approx != 0).mean()
+    if p_s < 1.0:
+        assert abs(kept_a - p_s) < 0.01
+    else:
+        assert kept_a > 0.95
+    both = (dense != 0) & (approx != 0)
+    if p_q < 32:
+        level = float(np.abs(x).max()) / (2 ** (p_q - 1) - 1)
+        assert np.max(np.abs(dense[both] - approx[both])) <= level + 1e-6
+    else:
+        np.testing.assert_allclose(dense[both], approx[both], rtol=1e-6)

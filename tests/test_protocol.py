@@ -13,6 +13,7 @@ from repro.fl.protocols import make_setup, run_method
 
 
 # -- C-fraction admission (Alg. 1 server side) ---------------------------
+@pytest.mark.smoke
 def test_c_fraction_gate():
     srv = TeasqServer({"w": jnp.zeros(2)}, ServerConfig(
         n_devices=100, c_fraction=0.1))
@@ -25,6 +26,7 @@ def test_c_fraction_gate():
     assert srv.try_dispatch() is not None
 
 
+@pytest.mark.smoke
 def test_cache_aggregates_at_K():
     srv = TeasqServer({"w": jnp.zeros(2)}, ServerConfig(
         n_devices=30, c_fraction=0.5, gamma=0.1, alpha=1.0))
@@ -40,6 +42,7 @@ def test_cache_aggregates_at_K():
 
 
 # -- Algorithm 5 ---------------------------------------------------------
+@pytest.mark.smoke
 def test_greedy_search_respects_theta():
     """Synthetic accuracy surface: acc = 0.9 - penalties. The search must
     stop at the most compressed point within theta of baseline."""
@@ -56,6 +59,7 @@ def test_greedy_search_respects_theta():
     assert len(trace) >= 3
 
 
+@pytest.mark.smoke
 def test_schedule_decays_toward_less_compression():
     sch = CompressionSchedule(p_s0_idx=3, p_q0_idx=2, step_size=10)
     p_s0, p_q0 = sch.at_round(0)
@@ -70,6 +74,7 @@ def test_schedule_decays_toward_less_compression():
         prev = cur
 
 
+@pytest.mark.smoke
 def test_make_schedule_starts_more_compressed():
     sch = make_schedule(si=1, qi=1, total_rounds=40)
     assert sch.p_s0_idx == 2 and sch.p_q0_idx == 2
