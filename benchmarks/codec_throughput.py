@@ -1,0 +1,113 @@
+"""Codec throughput: encode/decode MB/s + bytes-on-wire per registered codec.
+
+Runs every codec in ``repro.core.codecs.CODECS`` on the FMNIST CNN pytree
+(the paper's model) across the compression grid p_s x p_q, measuring wall
+encode/decode throughput against the dense f32 payload size and the metered
+wire bytes (for ``PackedBitstreamCodec`` this is ``len()`` of the actual
+byte string; the packed codec must price identically to the analytic
+``expected_pytree_wire_bytes``).  Results land in
+results/codec_throughput.json.
+
+  PYTHONPATH=src python -m benchmarks.codec_throughput [--reps 3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.codecs import CODECS, resolve_codec
+from repro.core.compression import (expected_pytree_wire_bytes,
+                                    pytree_dense_bytes)
+from repro.models.cnn import init_cnn
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "codec_throughput.json")
+GRID_PS = (0.1, 0.25, 0.5)
+GRID_PQ = (2, 4, 8)
+
+
+def _sync(tree: Any) -> Any:
+    """Force any pending device computation (threshold codec is lazy jnp)."""
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return tree
+
+
+def bench_codec(name: str, tree: Any, p_s: float, p_q: int,
+                reps: int = 3) -> Dict[str, Any]:
+    codec = resolve_codec(name, p_s, p_q)
+    dense_mb = pytree_dense_bytes(tree) / 1e6
+    rng = np.random.RandomState(0)
+
+    wire = codec.encode(tree, rng=rng)     # warmup (jit compiles)
+    _sync(codec.decode(wire))
+    # identity/threshold decode just returns the (already materialized)
+    # payload — timing that no-op would report timer-resolution "MB/s"
+    passthrough = codec.decode(wire) is wire.payload
+
+    enc_s, dec_s = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        wire = codec.encode(tree, rng=rng)
+        _sync(wire.payload)
+        enc_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _sync(codec.decode(wire))
+        dec_s.append(time.perf_counter() - t0)
+
+    return {
+        "codec": name, "resolved": codec.name, "p_s": p_s, "p_q": p_q,
+        "wire_bytes": wire.nbytes,
+        "expected_bytes": expected_pytree_wire_bytes(tree, codec.p_s,
+                                                     codec.p_q),
+        "dense_bytes": pytree_dense_bytes(tree),
+        "compression_x": round(pytree_dense_bytes(tree) / wire.nbytes, 2),
+        "encode_mbps": round(dense_mb / min(enc_s), 2),
+        "decode_mbps": (None if passthrough
+                        else round(dense_mb / min(dec_s), 2)),
+    }
+
+
+def run(reps: int = 3, grid_ps: Sequence[float] = GRID_PS,
+        grid_pq: Sequence[int] = GRID_PQ,
+        codecs: Optional[Sequence[str]] = None,
+        out_path: Optional[str] = RESULTS_PATH) -> List[Dict[str, Any]]:
+    tree = init_cnn(jax.random.PRNGKey(0))
+    rows = []
+    for name in (codecs if codecs is not None else sorted(CODECS)):
+        for p_s in grid_ps:
+            for p_q in grid_pq:
+                row = bench_codec(name, tree, p_s, p_q, reps=reps)
+                rows.append(row)
+                dec = (f"{row['decode_mbps']:8.1f}MB/s"
+                       if row['decode_mbps'] is not None else "     n/a")
+                print(f"[{row['codec']:9s}] p_s={p_s:4.2f} p_q={p_q:2d} "
+                      f"wire={row['wire_bytes']:8d}B "
+                      f"({row['compression_x']:5.1f}x) "
+                      f"enc={row['encode_mbps']:8.1f}MB/s "
+                      f"dec={dec}", flush=True)
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"[codec_throughput] {len(rows)} rows -> {out_path}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+    run(reps=args.reps, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

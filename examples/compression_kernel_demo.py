@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codecs import PackedBitstreamCodec
 from repro.core.compression import (compress_pytree, pytree_dense_bytes,
                                     pytree_wire_bytes)
 from repro.kernels.ops import compress_roundtrip
@@ -14,10 +15,13 @@ from repro.models.cnn import init_cnn
 w = init_cnn(jax.random.PRNGKey(0))
 dense = pytree_dense_bytes(w)
 
-print("p_s    p_q   wire_KB  ratio   kernel_mse")
+print("p_s    p_q   wire_KB  ratio   packed_KB  kernel_mse")
 for p_s, p_q in [(1.0, 32), (0.5, 16), (0.25, 8), (0.1, 8), (0.05, 4)]:
     c = compress_pytree(w, p_s, p_q)
     wire = pytree_wire_bytes(c)
+    # the real byte stream (codec API): len() must equal the analytic price
+    packed = len(PackedBitstreamCodec(p_s, p_q).encode(w).payload)
+    assert packed == wire, (packed, wire)
     # kernel path (block-local Top-K, interpret mode on CPU)
     mses = []
     for leaf in jax.tree.leaves(w):
@@ -26,4 +30,4 @@ for p_s, p_q in [(1.0, 32), (0.5, 16), (0.25, 8), (0.1, 8), (0.05, 4)]:
         y = compress_roundtrip(leaf, p_s=p_s, bits=min(p_q, 8), block=4096)
         mses.append(float(jnp.mean((y - leaf) ** 2)))
     print(f"{p_s:4.2f}  {p_q:4d}  {wire/1024:7.1f}  {dense/wire:5.1f}x  "
-          f"{np.mean(mses):.2e}")
+          f"{packed/1024:9.1f}  {np.mean(mses):.2e}")

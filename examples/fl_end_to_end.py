@@ -11,6 +11,7 @@ reference simulator and ``--cohort 32`` enables vectorized cohort training.
 import argparse
 import time
 
+from repro.core.codecs import CODECS
 from repro.core.dynamic import make_schedule
 from repro.fl.protocols import (best_acc_within, make_setup,
                                 profile_compression, run_method)
@@ -29,6 +30,14 @@ def main():
     ap.add_argument("--cohort", type=int, default=0,
                     help="engine cohort size (>0 = vectorized local "
                          "training for the async methods)")
+    ap.add_argument("--codec", choices=sorted(CODECS), default="dense",
+                    help="wire codec for the compressed methods: TEASQ "
+                         "defaults to 'dense' (the Algs. 3-4 reference codec "
+                         "priced as the packed stream); 'packed' transmits "
+                         "the real bit-packed bytes (bit-identical result), "
+                         "'threshold' the approximate in-graph channel, "
+                         "'identity' disables compression (default: "
+                         "%(default)s)")
     args = ap.parse_args()
 
     iid = not args.noniid
@@ -50,7 +59,7 @@ def main():
         hist = run_method(method, data, parts, w0, iid=iid,
                           time_budget=args.budget, epochs=1, eval_every=4,
                           backend=args.backend, cohort_size=args.cohort,
-                          **kw)
+                          codec=args.codec, **kw)
         best = max(h.accuracy for h in hist)
         rows.append((method, hist[-1].round, best,
                      hist[-1].bytes_up / 1e6, time.time() - t0))

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# One entry point for builders and CI.
+#
+# 1. the pinned tier-1 suite (ROADMAP.md):  python -m pytest -x -q
+#    (pytest.ini excludes the opt-in wall-clock `scale` marker)
+# 2. the fast smoke subset, which includes the benchmark harness smoke
+#    tests (tests/test_codec_throughput.py) — <60 s total
+#
+# Usage: scripts/tier1.sh [extra pytest args for the tier-1 run]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[tier1] pinned suite: python -m pytest -x -q $*"
+python -m pytest -x -q "$@"
+
+echo "[tier1] smoke subset: python -m pytest -m smoke -q"
+python -m pytest -m smoke -q

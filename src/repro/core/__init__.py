@@ -1,7 +1,27 @@
+from repro.core.codecs import (CODECS, Codec, DenseRefCodec, IdentityCodec,
+                               PackedBitstreamCodec, ThresholdGraphCodec,
+                               Wire, resolve_codec)
 from repro.core.compression import (compress_pytree, decompress_pytree,
+                                    expected_pytree_wire_bytes,
                                     pytree_dense_bytes, pytree_wire_bytes,
                                     roundtrip_pytree, sparsify_quantize_dense)
 from repro.core.dynamic import CompressionSchedule, greedy_search, make_schedule
 from repro.core.server import ServerConfig, TeasqServer
 from repro.core.staleness import (aggregate_cache, merge_global, mixing_alpha,
                                   staleness_weight, weighted_average)
+
+__all__ = [
+    # codec API (the wire seam: prefer this over the raw compression fns)
+    "CODECS", "Codec", "DenseRefCodec", "IdentityCodec",
+    "PackedBitstreamCodec", "ThresholdGraphCodec", "Wire", "resolve_codec",
+    # Algs. 3-4 primitives
+    "compress_pytree", "decompress_pytree", "expected_pytree_wire_bytes",
+    "pytree_dense_bytes", "pytree_wire_bytes", "roundtrip_pytree",
+    "sparsify_quantize_dense",
+    # Alg. 5 dynamic compression
+    "CompressionSchedule", "greedy_search", "make_schedule",
+    # server state machine (Algs. 1-2)
+    "ServerConfig", "TeasqServer",
+    "aggregate_cache", "merge_global", "mixing_alpha", "staleness_weight",
+    "weighted_average",
+]

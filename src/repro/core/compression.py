@@ -13,6 +13,11 @@ Two families of entry points:
   ``fed_step`` on the TPU mesh: same math, dense masked layout (XLA cannot
   ship data-dependent shapes through collectives).  The Pallas kernel in
   ``repro.kernels.topk_quant`` implements the block-local TPU version.
+
+These are the *primitives*; FL code selects between them through the
+pluggable codec seam ``repro.core.codecs`` (``resolve_codec`` /
+``ProtocolStrategy.channel_for``), which also hosts the real bit-packed
+byte stream (``PackedBitstreamCodec``).
 """
 from __future__ import annotations
 
@@ -124,12 +129,18 @@ def topk_count(n: int, p_s: float) -> int:
     return max(1, int(round(p_s * n))) if p_s < 1.0 else n
 
 
+def index_bits(n: int) -> int:
+    """Bits per transmitted index for an ``n``-element tensor — shared by the
+    analytic size model below and the actual bitstream serializer
+    (``repro.core.codecs.PackedBitstreamCodec``), which must agree exactly."""
+    return max(1, math.ceil(math.log2(max(n, 2))))
+
+
 def _wire_bits(n: int, k: int, p_q: int) -> int:
     """Packed size of ``k`` kept values out of ``n``: p_q bits/value, index
     bits/value when sparse, one f32 scale."""
-    index_bits = max(1, math.ceil(math.log2(max(n, 2))))
     vbits = min(p_q, FLOAT_BITS)
-    return k * (vbits + (index_bits if k < n else 0)) + FLOAT_BITS
+    return k * (vbits + (index_bits(n) if k < n else 0)) + FLOAT_BITS
 
 
 def compress_tensor(x: np.ndarray, p_s: float, p_q: int,
@@ -168,12 +179,14 @@ def decompress_tensor(c: Dict[str, Any]) -> np.ndarray:
     return flat.reshape(c["shape"])
 
 
-def tensor_wire_bits(c: Dict[str, Any], index_bits: Optional[int] = None) -> int:
+def tensor_wire_bits(c: Dict[str, Any],
+                     index_bits_override: Optional[int] = None) -> int:
     """Transmitted size: p_q bits/value + index bits/value + one f32 scale."""
     k = len(c["values"])
-    if index_bits is not None:
+    if index_bits_override is not None:
         vbits = min(c["p_q"], FLOAT_BITS)
-        return k * (vbits + (index_bits if k < c["n"] else 0)) + FLOAT_BITS
+        return k * (vbits + (index_bits_override if k < c["n"] else 0)) \
+            + FLOAT_BITS
     return _wire_bits(c["n"], k, c["p_q"])
 
 
@@ -188,9 +201,12 @@ def decompress_pytree(ctree: Any) -> Any:
 
 
 def pytree_wire_bytes(ctree: Any) -> int:
+    """Transmitted size of a compressed pytree: one bit-level concatenated
+    stream across tensors (no per-tensor byte alignment), rounded up to whole
+    bytes — exactly what ``repro.core.codecs.PackedBitstreamCodec`` emits."""
     leaves = jax.tree.leaves(
         ctree, is_leaf=lambda x: isinstance(x, dict) and "values" in x)
-    return sum(tensor_wire_bits(c) for c in leaves) // 8
+    return (sum(tensor_wire_bits(c) for c in leaves) + 7) // 8
 
 
 def pytree_dense_bytes(tree: Any) -> int:
@@ -210,8 +226,8 @@ def expected_pytree_wire_bytes(tree: Any, p_s: float, p_q: int) -> int:
     the simulator channel when no compression is active)."""
     if p_s >= 1.0 and p_q >= FLOAT_BITS:
         return pytree_dense_bytes(tree)
-    return sum(expected_tensor_wire_bits(x.size, p_s, p_q)
-               for x in jax.tree.leaves(tree)) // 8
+    return (sum(expected_tensor_wire_bits(x.size, p_s, p_q)
+                for x in jax.tree.leaves(tree)) + 7) // 8
 
 
 def roundtrip_pytree(tree: Any, p_s: float, p_q: int,

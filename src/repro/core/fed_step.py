@@ -37,7 +37,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.staleness import mixing_alpha, staleness_weight
-from repro.sharding.rules import Rules, active_rules, logical_axes_for
+from repro.sharding.rules import (Rules, active_rules, logical_axes_for,
+                                  shard_map)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,7 +279,7 @@ def _force_gather(delta, params, wts, a_t, fed: FedConfig,
             u = jnp.einsum("gn,g->n", dq, wts_r).reshape(w0_loc.shape)
             return (w0_loc + a_t_r * u).astype(w0_loc.dtype)
 
-        out = jax.shard_map(body, mesh=mesh,
+        out = shard_map(body, mesh=mesh,
                             in_specs=(in_spec, pspec, P(), P()),
                             out_specs=pspec, check_vma=False)(d, w0, wts, a_t)
         new_flat.append(out)

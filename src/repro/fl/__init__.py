@@ -1,3 +1,6 @@
+from repro.core.codecs import (CODECS, Codec, DenseRefCodec, IdentityCodec,
+                               PackedBitstreamCodec, ThresholdGraphCodec,
+                               resolve_codec)
 from repro.fl.engine import (ChannelMeter, CohortTrainer, DeviceRegistry,
                              FLEngine, SerialTrainer)
 from repro.fl.protocols import (METHODS, STRATEGIES, ProtocolStrategy,
@@ -6,3 +9,30 @@ from repro.fl.protocols import (METHODS, STRATEGIES, ProtocolStrategy,
                                 run_method, time_to_acc)
 from repro.fl.simulator import (FLSimulator, LogEntry, ScenarioConfig,
                                 SimConfig, TierSpec)
+
+__all__ = [
+    # codec API re-export: FL code selects wire formats through this seam
+    "CODECS", "Codec", "DenseRefCodec", "IdentityCodec",
+    "PackedBitstreamCodec", "ThresholdGraphCodec", "resolve_codec",
+    "ChannelMeter", "CohortTrainer", "DeviceRegistry", "FLEngine",
+    "SerialTrainer",
+    "METHODS", "STRATEGIES", "ProtocolStrategy", "best_acc_within",
+    "make_setup", "make_sim", "make_strategy", "profile_compression",
+    "run_method", "time_to_acc",
+    "FLSimulator", "LogEntry", "ScenarioConfig", "SimConfig", "TierSpec",
+]
+
+
+def __getattr__(name):
+    # One-release deprecation shim: FL code used to reach for the raw
+    # ``roundtrip_pytree`` channel; the codec seam replaced it (use
+    # ``resolve_codec("dense", p_s, p_q).roundtrip(tree, rng=rng)``).
+    if name == "roundtrip_pytree":
+        import warnings
+        warnings.warn(
+            "importing roundtrip_pytree from repro.fl is deprecated and will "
+            "be removed next release; use repro.core.codecs.DenseRefCodec "
+            "(or resolve_codec) instead", DeprecationWarning, stacklevel=2)
+        from repro.core.compression import roundtrip_pytree
+        return roundtrip_pytree
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -14,12 +14,15 @@ Mapping to the paper (TEASQ-Fed, Algs. 1-2):
   single jitted scan over the einsum-formulated CNN
   (``repro.models.cnn.cnn_cohort_loss``), one compiled program per padded
   cohort bucket.
-* **Algs. 3-4 (wire compression)** — the channel layer: the serial path uses
-  the faithful packed codec (``roundtrip_pytree``); the cohort path applies
-  the in-graph threshold channel (``sparsify_quantize_threshold``) inside
-  the same jitted call and accounts bytes with the shape-only
-  ``expected_pytree_wire_bytes`` (the packed format's size is
-  value-independent, so arrivals can be scheduled before training runs).
+* **Algs. 3-4 (wire compression)** — the codec layer
+  (``repro.core.codecs``): every dispatch asks the bound strategy for a
+  :class:`~repro.core.codecs.Codec` via ``channel_for(t)``; the serial path
+  runs ``codec.roundtrip`` (the faithful reference codec by default, the
+  real bit-packed stream with ``SimConfig.codec="packed"``) while the
+  cohort path fuses ``ThresholdGraphCodec.apply_tree`` into its jitted scan
+  and meters bytes shape-only with ``codec.wire_bytes`` (the packed
+  format's size is value-independent, so arrivals can be scheduled before
+  training runs).
 * **Alg. 2 (Receiver/Updater, Eqs. 6-10)** — ``FLEngine._handle_arrival``
   delegates to the bound :class:`~repro.fl.protocols.ProtocolStrategy`:
   the TEA/TEASQ family feeds ``TeasqServer.receive`` (cached
@@ -45,9 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import local_update
-from repro.core.compression import (expected_pytree_wire_bytes,
-                                    pytree_dense_bytes, roundtrip_pytree,
-                                    sparsify_quantize_threshold)
+from repro.core.codecs import Codec, IdentityCodec, ThresholdGraphCodec
 from repro.core.latency import (comm_latency, device_rates,
                                 sample_compute_latency)
 from repro.core.server import ServerConfig, TeasqServer
@@ -99,7 +100,12 @@ class DeviceRegistry:
 
 
 class ChannelMeter:
-    """Cumulative and per-transfer-max byte accounting for both directions."""
+    """Cumulative and per-transfer-max byte accounting for both directions.
+
+    Transfers are priced by the wire codec (``codec.wire_bytes`` — shape-only
+    and value-independent for every registered codec) via the ``*_tree``
+    helpers; the scalar ``down``/``up`` record an already-priced transfer
+    (e.g. the serial path, which meters the actual encoded size)."""
 
     def __init__(self):
         self.bytes_up = 0
@@ -114,6 +120,16 @@ class ChannelMeter:
     def up(self, nbytes: int) -> None:
         self.bytes_up += nbytes
         self.max_up = max(self.max_up, nbytes)
+
+    def down_tree(self, codec: Codec, tree: Any) -> int:
+        nbytes = codec.wire_bytes(tree)
+        self.down(nbytes)
+        return nbytes
+
+    def up_tree(self, codec: Codec, tree: Any) -> int:
+        nbytes = codec.wire_bytes(tree)
+        self.up(nbytes)
+        return nbytes
 
 
 @dataclasses.dataclass
@@ -172,9 +188,7 @@ def _cohort_round(w_versions, vidx, xs, ys, didx, bidx, valid, *,
     CNN), up-channel.  Shapes: w_versions leaves (V, ...); vidx/didx (C,);
     xs/ys (N, n_max, ...); bidx (T, C, bs); valid (T, C)."""
 
-    def channel(tree):
-        return jax.tree.map(
-            lambda a: sparsify_quantize_threshold(a, p_s, p_q, iters), tree)
+    channel = ThresholdGraphCodec(p_s, p_q, iters).apply_tree
 
     w_recv_v = jax.vmap(channel)(w_versions)
     w_recv = jax.tree.map(lambda a: a[vidx], w_recv_v)
@@ -375,12 +389,6 @@ class FLEngine:
                         if cfg.cohort_size > 0 else SerialTrainer(self))
 
     # -- shared helpers ----------------------------------------------------
-    def _channel_roundtrip(self, tree: Any, p_s: float,
-                           p_q: int) -> Tuple[Any, int]:
-        if p_s >= 1.0 and p_q >= 32:
-            return tree, pytree_dense_bytes(tree)
-        return roundtrip_pytree(tree, p_s, p_q, self.rng)
-
     def resolve_payload(self, payload: Any) -> Tuple[Any, int]:
         """(w_local, n_k) from either an eager tuple or a PendingTask."""
         if isinstance(payload, PendingTask):
@@ -460,15 +468,14 @@ class FLEngine:
             return
         self.stats.dispatches += 1
         w_t, t0 = grant
-        p_s, p_q = self.strategy.compression_at(t0)
+        codec = self.strategy.channel_for(t0)
 
         if self.scenario is not None and self.scenario.active:
             scen = self.scenario
             u = self.scenario_rng.random_sample()
             if u < scen.dropout_prob + scen.failure_prob:
                 mode = "dropout" if u < scen.dropout_prob else "transient"
-                nbytes_down = expected_pytree_wire_bytes(w_t, p_s, p_q)
-                self.channel.down(nbytes_down)
+                nbytes_down = self.channel.down_tree(codec, w_t)
                 n_k = len(self.partitions[k])
                 n_batches = max(1, n_k // cfg.batch_size)
                 dl, cp, _ = self.devices.round_latency(
@@ -478,21 +485,20 @@ class FLEngine:
                 return
 
         if self.trainer.deferred:
-            nbytes_down = expected_pytree_wire_bytes(w_t, p_s, p_q)
-            self.channel.down(nbytes_down)
-            task = self.trainer.submit(k, w_t, t0, p_s, p_q)
-            nbytes_up = nbytes_down   # same tree shapes and (p_s, p_q)
-            self.channel.up(nbytes_up)
+            nbytes_down = self.channel.down_tree(codec, w_t)
+            task = self.trainer.submit(k, w_t, t0, codec.p_s, codec.p_q)
+            # same tree shapes and (p_s, p_q) => nbytes_up == nbytes_down
+            nbytes_up = self.channel.up_tree(codec, w_t)
             n_batches = max(1, task.n_k // cfg.batch_size)
             dl, cp, ul = self.devices.round_latency(
                 k, nbytes_down * 8, nbytes_up * 8, n_batches, self.rng)
             push(now + dl + cp + ul, "arrival", k, task, t0)
             return
 
-        w_recv, nbytes_down = self._channel_roundtrip(w_t, p_s, p_q)
+        w_recv, nbytes_down = codec.roundtrip(w_t, rng=self.rng)
         self.channel.down(nbytes_down)
         w_local, n_k = self.strategy.local_train(self, k, w_recv)
-        w_up, nbytes_up = self._channel_roundtrip(w_local, p_s, p_q)
+        w_up, nbytes_up = codec.roundtrip(w_local, rng=self.rng)
         self.channel.up(nbytes_up)
         n_batches = max(1, n_k // cfg.batch_size)
         dl, cp, ul = self.devices.round_latency(
@@ -531,12 +537,12 @@ class FLEngine:
         now = 0.0
         self._log(now)
         per_round = min(cfg.devices_per_round, cfg.n_devices)
+        identity = IdentityCodec()       # FedAvg/MOON ship dense f32
         while now < time_budget and self.server.t < max_rounds:
             sel = self.rng.choice(cfg.n_devices, per_round, replace=False)
             updates, weights, latencies = [], [], []
             for k in sel:
-                nbytes = pytree_dense_bytes(self.server.w)
-                self.channel.down(nbytes)
+                nbytes = self.channel.down_tree(identity, self.server.w)
                 w_local, n_k = self.strategy.local_train(self, k,
                                                          self.server.w)
                 self.channel.up(nbytes)

@@ -2,13 +2,14 @@
 
 The strategy interface is the pluggable seam of the FL engine
 (``repro.fl.engine.FLEngine``): each protocol is a small class that answers
-three questions — what compression does a round-``t`` dispatch use
-(Algs. 3-4), how does a device train locally (Alg. 1 device side), and what
-happens when an update arrives at the server (Alg. 2 for the TEA family,
-immediate mixing for the async baselines, the straggler-bound synchronous
-loop for FedAvg/MOON).  ``make_strategy`` resolves a method name from
-``METHODS`` to a bound instance; registering a new protocol is one subclass
-plus one registry entry.
+three questions — what wire codec does a round-``t`` dispatch use
+(``channel_for``: a ``repro.core.codecs.Codec`` bound to the round's
+Algs. 3-4 operating point), how does a device train locally (Alg. 1 device
+side), and what happens when an update arrives at the server (Alg. 2 for the
+TEA family, immediate mixing for the async baselines, the straggler-bound
+synchronous loop for FedAvg/MOON).  ``make_strategy`` resolves a method name
+from ``METHODS`` to a bound instance; registering a new protocol is one
+subclass plus one registry entry.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ from typing import Any, ClassVar, Dict, List, Optional, Tuple, Type
 import jax
 import numpy as np
 
-from repro.core.compression import roundtrip_pytree
+from repro.core.codecs import Codec, resolve_codec
 from repro.core.dynamic import greedy_search
 from repro.core.staleness import staleness_weight
 from repro.data.synthetic import (make_fmnist_like, partition_iid,
@@ -37,7 +38,12 @@ METHODS = ("fedavg", "fedasync", "tea", "teas", "teaq", "teastatic",
 class ProtocolStrategy(abc.ABC):
     """One FL protocol, bound to a SimConfig.  Engine hooks:
 
-    * ``compression_at(t)`` — (p_s, p_q) for a task dispatched at round t.
+    * ``channel_for(t)`` — the wire :class:`~repro.core.codecs.Codec` for a
+      task dispatched at round t (both directions); engines meter bytes via
+      ``codec.wire_bytes`` and apply loss via ``codec.roundtrip``.
+    * ``compression_at(t)`` — the (p_s, p_q) *policy* behind it (Alg. 5
+      schedule or static point); protocols override this one-liner and the
+      base ``channel_for`` binds it to the ``SimConfig.codec`` family.
     * ``local_train(engine, k, w)`` — device-side update; defaults to the
       engine's trainer (serial prox-SGD or vectorized cohort).
     * ``on_arrival(engine, now, k, payload, h)`` — server-side handling of a
@@ -54,6 +60,13 @@ class ProtocolStrategy(abc.ABC):
 
     def compression_at(self, t: int) -> Tuple[float, int]:
         return 1.0, 32
+
+    def channel_for(self, t: int) -> Codec:
+        """Codec for a round-``t`` dispatch: the strategy's (p_s, p_q) policy
+        bound to the configured codec family (``SimConfig.codec``)."""
+        p_s, p_q = self.compression_at(t)
+        return resolve_codec(self.cfg.codec, p_s, p_q,
+                             iters=self.cfg.cohort_channel_iters)
 
     def local_train(self, engine, k: int, w: Any) -> Tuple[Any, int]:
         return engine.trainer.train(k, w)
@@ -239,15 +252,16 @@ def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
 
 
 def profile_compression(w: Any, data: Dict[str, np.ndarray], theta: float = 0.02,
-                        seed: int = 0):
-    """Algorithm 5 search on a profiling model ``w``."""
+                        seed: int = 0, codec: str = "dense"):
+    """Algorithm 5 search on a profiling model ``w``, through the codec
+    seam (stochastic QSGD rounding, as the wire applies)."""
     xs = data["x_test"][:2000]
     ys = data["y_test"][:2000]
     eval_jit = jax.jit(cnn_accuracy)
     rng = np.random.RandomState(seed)
 
     def eval_acc(p_s: float, p_q: int) -> float:
-        w2, _ = roundtrip_pytree(w, p_s, p_q, rng)
+        w2, _ = resolve_codec(codec, p_s, p_q).roundtrip(w, rng=rng)
         return float(eval_jit(w2, xs, ys))
 
     return greedy_search(eval_acc, theta)

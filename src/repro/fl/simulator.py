@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import local_update
-from repro.core.compression import (pytree_dense_bytes, roundtrip_pytree)
+from repro.core.codecs import IdentityCodec
 from repro.core.dynamic import CompressionSchedule
 from repro.core.latency import (ComputeConfig, WirelessConfig, comm_latency,
                                 device_rates, sample_compute_latency)
@@ -130,6 +130,12 @@ class SimConfig:
     p_s: float = 1.0
     p_q: int = 32
     schedule: Optional[CompressionSchedule] = None
+    # wire codec family (repro.core.codecs.CODECS): "dense" = the Algs. 3-4
+    # reference codec, "packed" = the real bit-packed stream, "threshold" =
+    # the in-graph approximate channel, "identity" = compression off.  The
+    # uncompressed (p_s>=1, p_q>=32) point short-circuits to identity for
+    # every family.
+    codec: str = "dense"
     # latency model
     wireless: WirelessConfig = dataclasses.field(default_factory=WirelessConfig)
     compute: ComputeConfig = dataclasses.field(default_factory=ComputeConfig)
@@ -178,26 +184,13 @@ class FLSimulator:
         self.prev_local: Dict[int, Any] = {}   # MOON: per-device prev model
         self._eval = jax.jit(cnn_accuracy)
         self.history: List[LogEntry] = []
+        # the codec seam is shared with the engine: the bound strategy's
+        # channel_for(t) answers "which wire codec does a round-t dispatch
+        # use" for both simulators (lazy import: protocols imports us)
+        from repro.fl.protocols import make_strategy
+        self.strategy = make_strategy(cfg.method, cfg)
 
     # ------------------------------------------------------------------
-    def _compression_at(self, t: int) -> Tuple[float, int]:
-        c = self.cfg
-        if c.method in ("tea", "fedavg", "fedasync", "moon", "port", "asofed"):
-            return 1.0, 32
-        if c.method == "teasq" and c.schedule is not None:
-            return c.schedule.at_round(t)
-        if c.method == "teas":
-            return c.p_s, 32
-        if c.method == "teaq":
-            return 1.0, c.p_q
-        return c.p_s, c.p_q       # teastatic (or teasq without schedule)
-
-    def _channel(self, tree: Any, p_s: float, p_q: int) -> Tuple[Any, int]:
-        """Lossy compress->decompress; returns (received tree, wire bytes)."""
-        if p_s >= 1.0 and p_q >= 32:
-            return tree, pytree_dense_bytes(tree)
-        return roundtrip_pytree(tree, p_s, p_q, self.rng)
-
     def _train_device(self, k: int, w: Any) -> Tuple[Any, int]:
         idx = self.partitions[k]
         x, y = self.data["x_train"][idx], self.data["y_train"][idx]
@@ -288,12 +281,12 @@ class FLSimulator:
                     waiting.append(k)
                     continue
                 w_t, t0 = grant
-                p_s, p_q = self._compression_at(t0)
-                w_recv, nbytes_down = self._channel(w_t, p_s, p_q)
+                codec = self.strategy.channel_for(t0)
+                w_recv, nbytes_down = codec.roundtrip(w_t, rng=self.rng)
                 self.bytes_down += nbytes_down
                 self.max_down = max(self.max_down, nbytes_down)
                 w_local, n_k = self._train_device(k, w_recv)
-                w_up, nbytes_up = self._channel(w_local, p_s, p_q)
+                w_up, nbytes_up = codec.roundtrip(w_local, rng=self.rng)
                 self.bytes_up += nbytes_up
                 self.max_up = max(self.max_up, nbytes_up)
                 n_batches = max(1, n_k // cfg.batch_size)
@@ -330,11 +323,12 @@ class FLSimulator:
         now = 0.0
         self._log(now)
         per_round = min(cfg.devices_per_round, cfg.n_devices)
+        identity = IdentityCodec()       # FedAvg/MOON ship dense f32
         while now < time_budget and self.server.t < max_rounds:
             sel = self.rng.choice(cfg.n_devices, per_round, replace=False)
             updates, weights, latencies = [], [], []
             for k in sel:
-                nbytes = pytree_dense_bytes(self.server.w)
+                nbytes = identity.wire_bytes(self.server.w)
                 self.bytes_down += nbytes
                 self.max_down = max(self.max_down, nbytes)
                 w_local, n_k = self._train_device(k, self.server.w)

@@ -1,1 +1,6 @@
+from repro.kernels.bitpack import (BitReader, bits_to_field, field_to_bits,
+                                   pack_segments)
 from repro.kernels.ops import compress_roundtrip, ssd
+
+__all__ = ["BitReader", "bits_to_field", "field_to_bits", "pack_segments",
+           "compress_roundtrip", "ssd"]

@@ -1,0 +1,102 @@
+"""Fixed-width bit-packing kernels for the packed wire format (Alg. 3).
+
+``field_to_bits`` / ``bits_to_field`` are the vectorized (un)packers behind
+``repro.core.codecs.PackedBitstreamCodec``: a field of ``k`` unsigned
+integers at ``width`` bits becomes a flat MSB-first {0, 1} array that the
+codec concatenates *bit-level* across fields and tensors (no per-tensor byte
+padding), so the emitted byte count matches the analytic size model
+``repro.core.compression.expected_pytree_wire_bytes`` exactly:
+
+    bits(tensor) = k * (min(p_q, 32) + [k < n] * ceil(log2 n)) + 32
+    len(stream)  = ceil(sum_over_tensors(bits) / 8)
+
+``field_to_bits`` / ``bits_to_field`` are pure ``jnp`` shift/mask
+arithmetic — elementwise VPU work that XLA lowers efficiently on TPU (the
+Pallas block variant of the *upstream* sparsify+quantize stage lives in
+``repro.kernels.topk_quant``; packing itself has no block-local structure
+worth a hand-written kernel).  The host-side helpers ``pack_segments`` /
+``BitReader`` apply the SAME shift/mask formula in plain numpy — per-segment
+jit dispatch + host<->device transfers cost ~4 ms each on CPU, which would
+dominate the serial simulator's per-round encode — and materialize bytes
+with ``np.packbits`` / ``np.unpackbits``.  tests/test_compression_invariants
+pins host-path == kernel-path bit equality.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def field_to_bits(vals: jax.Array, width: int) -> jax.Array:
+    """(k,) unsigned ints -> (k*width,) uint8 bits, MSB first per value."""
+    v = vals.astype(jnp.uint32).reshape(-1)
+    shifts = jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
+    return ((v[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def bits_to_field(bits: jax.Array, width: int) -> jax.Array:
+    """(k*width,) uint8 bits (MSB first) -> (k,) uint32 values."""
+    b = bits.reshape(-1, width).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(b * weights, axis=1, dtype=jnp.uint32)
+
+
+Segment = Tuple[np.ndarray, int]          # (uint32 values, bit width)
+
+
+def _np_field_to_bits(vals: np.ndarray, width: int) -> np.ndarray:
+    """Host-side twin of ``field_to_bits`` (identical formula, no dispatch)."""
+    shifts = np.arange(width - 1, -1, -1, dtype=np.uint32)
+    return ((vals[:, None] >> shifts) & np.uint32(1)).astype(np.uint8).reshape(-1)
+
+
+def pack_segments(segments: Sequence[Segment]) -> bytes:
+    """Concatenate fixed-width fields into one bit-level stream.
+
+    The final partial byte (if any) is zero-padded on the right by
+    ``np.packbits``, giving ``ceil(total_bits / 8)`` bytes.
+    """
+    chunks: List[np.ndarray] = []
+    for vals, width in segments:
+        v = np.ascontiguousarray(vals, dtype=np.uint32).reshape(-1)
+        if v.size == 0:
+            continue
+        assert 1 <= width <= 32
+        chunks.append(_np_field_to_bits(v, width))
+    if not chunks:
+        return b""
+    return np.packbits(np.concatenate(chunks)).tobytes()
+
+
+class BitReader:
+    """Sequential fixed-width field reader over a packed byte stream."""
+
+    def __init__(self, payload: bytes):
+        self._bits = np.unpackbits(np.frombuffer(payload, dtype=np.uint8))
+        self._pos = 0
+
+    def read(self, count: int, width: int) -> np.ndarray:
+        """Read ``count`` values of ``width`` bits each -> uint32 (count,)."""
+        if count == 0:
+            return np.zeros(0, np.uint32)
+        nbits = count * width
+        seg = self._bits[self._pos:self._pos + nbits]
+        if seg.size != nbits:
+            raise ValueError(
+                f"bitstream underrun: wanted {nbits} bits at {self._pos}, "
+                f"have {self._bits.size - self._pos}")
+        self._pos += nbits
+        # host-side twin of bits_to_field (same formula, no jit dispatch)
+        b = seg.reshape(count, width).astype(np.uint32)
+        weights = np.uint32(1) << np.arange(width - 1, -1, -1, dtype=np.uint32)
+        return (b * weights).sum(axis=1, dtype=np.uint32)
+
+    @property
+    def bits_read(self) -> int:
+        return self._pos

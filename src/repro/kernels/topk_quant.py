@@ -10,6 +10,13 @@ magnitude skew and measured in tests/test_kernels.py.
 Layout: x is reshaped to (M, BLOCK); grid = (M,); each program compresses one
 BLOCK-sized row resident in VMEM.  Outputs: int8 levels (M, BLOCK) and f32
 scales (M, 1).
+
+In the FL stack this kernel is subsumed by the codec seam
+(``repro.core.codecs``): ``ThresholdGraphCodec`` applies the same
+binary-search threshold channel in-graph for the vectorized cohort trainer,
+and ``PackedBitstreamCodec`` + ``repro.kernels.bitpack`` serialize the
+quantized stream into actual wire bytes.  ``topk_quant`` remains the
+block-local TPU formulation used by ``repro.kernels.ops.compress_roundtrip``.
 """
 from __future__ import annotations
 

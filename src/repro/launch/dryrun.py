@@ -157,6 +157,11 @@ def _parse_computations(hlo_text: str):
 
 
 _DOT_RE = re.compile(r"=\s+\S+\s+dot\(([^)]*)\)")
+# one dot operand: optional inline typed shape (newer HLO prints
+# ``dot(f32[128,256]{1,0} %lhs, ...)``) followed by the instruction name
+_DOT_OPERAND_RE = re.compile(
+    r"(?:[a-z][a-z0-9]*"          # any element type (f32, s16, f8e4m3fn, ...)
+    r"\[(?P<dims>[0-9,]*)\]\S*\s+)?%?(?P<name>[\w.\-]+)")
 _FUSION_RE = re.compile(r"\bfusion\(.*?calls=%?([\w.\-]+)")
 _CONTR_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _CONV_RE = re.compile(r"=\s+\S+\s+convolution\(")
@@ -214,11 +219,18 @@ def hlo_flops(hlo_text: str) -> float:
             if dm:
                 nm = _NAME_SHAPE_RE.match(ins)
                 res = _shape_dims(nm.group(2)) if nm else None
-                ops = [o.strip().lstrip("%") for o in dm.group(1).split(",")]
+                ops = _DOT_OPERAND_RE.finditer(dm.group(1))
+                lhs = next(ops, None)
                 cm = _CONTR_RE.search(ins)
                 k = 1
-                if cm and ops:
-                    lhs_dims = tab.get(ops[0])
+                if cm and lhs:
+                    # lhs shape: inline typed operand when present, else the
+                    # producing instruction's result shape from the table
+                    if lhs.group("dims") is not None:
+                        lhs_dims = [int(d) for d in
+                                    lhs.group("dims").split(",") if d]
+                    else:
+                        lhs_dims = tab.get(lhs.group("name"))
                     if lhs_dims:
                         for i in (int(x) for x in cm.group(1).split(",") if x):
                             if i < len(lhs_dims):

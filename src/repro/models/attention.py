@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init, head_rmsnorm, rotary
-from repro.sharding.rules import shard
+from repro.sharding.rules import shard, shard_map
 
 NEG_INF = -1e30
 
@@ -336,7 +336,7 @@ def attn_decode_seqshard(p, x, pos, cfg, cache) -> Tuple[jax.Array, dict]:
         o = jnp.moveaxis(o, 3, 1).reshape(Bq, 1, G * rep, hd)
         return o.astype(q_r.dtype), kc2, vc2
 
-    o, k2, v2 = jax.shard_map(
+    o, k2, v2 = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None), P(bspec, None, None, None),
                   P(bspec, None, None, None), cache_spec, cache_spec),

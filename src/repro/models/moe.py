@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init
-from repro.sharding.rules import active_rules, shard
+from repro.sharding.rules import active_rules, shard, shard_map
 
 
 def moe_init(key, cfg, dtype=jnp.float32):
@@ -160,6 +160,6 @@ def moe_apply(params, x, cfg) -> Tuple[jax.Array, jax.Array]:
             aux = jax.lax.pmean(aux, axes)
         return y, aux
 
-    y, aux = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    y, aux = shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)(params, xt)
     return shard(y.reshape(B, S, D), "batch", "seq", "d_model"), aux

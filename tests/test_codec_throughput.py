@@ -1,0 +1,34 @@
+"""Smoke coverage for the codec throughput benchmark (scripts/tier1.sh runs
+``pytest -m smoke``, which exercises the benchmark harness end to end on a
+reduced grid without writing results)."""
+import pytest
+
+from benchmarks.codec_throughput import bench_codec, run
+
+pytestmark = pytest.mark.smoke
+
+
+def test_codec_throughput_smoke_grid():
+    rows = run(reps=1, grid_ps=(0.25,), grid_pq=(8,), out_path=None)
+    assert {r["codec"] for r in rows} == {"dense", "identity", "packed",
+                                          "threshold"}
+    for r in rows:
+        assert r["encode_mbps"] > 0
+        # passthrough decodes (identity/threshold) report null, not a
+        # timer-resolution pseudo-throughput
+        if r["resolved"] in ("identity", "threshold"):
+            assert r["decode_mbps"] is None
+        else:
+            assert r["decode_mbps"] > 0
+        assert r["wire_bytes"] == r["expected_bytes"], r
+        if r["resolved"] != "identity":
+            assert r["wire_bytes"] < r["dense_bytes"]
+
+
+def test_codec_throughput_prices_identity_dense():
+    import jax
+    from repro.models.cnn import init_cnn
+    tree = init_cnn(jax.random.PRNGKey(0))
+    row = bench_codec("identity", tree, 0.25, 8, reps=1)
+    assert row["wire_bytes"] == row["dense_bytes"]
+    assert row["compression_x"] == 1.0

@@ -1,0 +1,120 @@
+"""Codec API property tests (hypothesis).
+
+For every registered codec: decode∘encode is idempotent on its own output,
+the packed codec's measured bytes equal the analytic
+``expected_pytree_wire_bytes`` price, and wire bytes are monotone in
+``p_s`` and ``p_q`` (within the sparse regime — at the dense boundary
+``k == n`` the index stream is dropped, a documented discontinuity).
+
+The always-running (hypothesis-free) codec invariants live in
+tests/test_compression_invariants.py.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codecs import (CODECS, DenseRefCodec, PackedBitstreamCodec,
+                               ThresholdGraphCodec, resolve_codec)
+from repro.core.compression import expected_pytree_wire_bytes
+
+# stay in the exactly-idempotent regime: p_q <= 16 keeps requantization
+# error below half a level (see test body), p_s <= 0.5 keeps k < n
+PS = st.sampled_from([0.05, 0.1, 0.25, 0.5])
+PQ = st.sampled_from([2, 4, 8, 16])
+
+
+def _tree(seed: int, n: int):
+    rng = np.random.RandomState(seed)
+    return {"a": rng.randn(n).astype(np.float32),
+            "b": rng.randn(max(1, n // 3), 2).astype(np.float32)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_s=PS, p_q=PQ, seed=st.integers(0, 100), n=st.integers(8, 600))
+def test_dense_and_packed_idempotent_on_own_output(p_s, p_q, seed, n):
+    """decode∘encode is a projection up to f32 dequantization rounding: the
+    second pass reproduces the same support and the same quantization levels
+    (the max kept value re-quantizes to exactly ±L), but the dequant map
+    ``level * scale / L`` is not a bit-exact f32 fixed point under the
+    re-measured scale, so values may drift by <= 1 ulp."""
+    tree = _tree(seed, n)
+    for name in ("dense", "packed"):
+        codec = resolve_codec(name, p_s, p_q)
+        y1, _ = codec.roundtrip(tree)
+        y2, _ = codec.roundtrip(y1)
+        for a, b in zip(jax.tree.leaves(y1), jax.tree.leaves(y2)):
+            a, b = np.asarray(a), np.asarray(b)
+            np.testing.assert_array_equal(a == 0, b == 0)   # same support
+            np.testing.assert_allclose(b, a, rtol=5e-7, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_s=PS, p_q=PQ, seed=st.integers(0, 100), n=st.integers(8, 600))
+def test_threshold_idempotent_up_to_requant_boundaries(p_s, p_q, seed, n):
+    """Re-applying the in-graph threshold channel never invents values: the
+    support only shrinks (the kept fraction of the quantized output can sit
+    below ``p_s``, and with coarse ``p_q`` a whole level group — values tied
+    at one quantized magnitude — may drop when the binary search cannot
+    split the tie), and surviving values drift <= 1 ulp."""
+    tree = _tree(seed, n)
+    codec = ThresholdGraphCodec(p_s, p_q)
+    y1, _ = codec.roundtrip(tree)
+    y2, _ = codec.roundtrip(y1)
+    for a, b in zip(jax.tree.leaves(y1), jax.tree.leaves(y2)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.all((a != 0) | (b == 0))                  # support shrinks
+        both = (a != 0) & (b != 0)
+        np.testing.assert_allclose(b[both], a[both], rtol=5e-7, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_s=PS, p_q=PQ, seed=st.integers(0, 100), n=st.integers(8, 600))
+def test_packed_bytes_equal_analytic_price(p_s, p_q, seed, n):
+    """len() of the actual byte string == the shape-only analytic size, for
+    every codec's wire_bytes answer at the same operating point."""
+    tree = _tree(seed, n)
+    packed = PackedBitstreamCodec(p_s, p_q)
+    wire = packed.encode(tree)
+    expected = expected_pytree_wire_bytes(tree, p_s, p_q)
+    assert isinstance(wire.payload, bytes)
+    assert len(wire.payload) == wire.nbytes == expected
+    for name in CODECS:
+        codec = resolve_codec(name, p_s, p_q)
+        if codec.name != "identity":
+            assert codec.wire_bytes(tree) == expected
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_s=PS, p_q=PQ, seed=st.integers(0, 100), n=st.integers(8, 600),
+       stochastic=st.booleans())
+def test_packed_matches_dense_ref_bitwise(p_s, p_q, seed, n, stochastic):
+    """Same mask, same scale, same levels — including identical RNG draw
+    order under stochastic QSGD rounding."""
+    tree = _tree(seed, n)
+    rng_a = np.random.RandomState(seed) if stochastic else None
+    rng_b = np.random.RandomState(seed) if stochastic else None
+    y_p, nb_p = PackedBitstreamCodec(p_s, p_q).roundtrip(tree, rng=rng_a)
+    y_d, nb_d = DenseRefCodec(p_s, p_q).roundtrip(tree, rng=rng_b)
+    assert nb_p == nb_d
+    for a, b in zip(jax.tree.leaves(y_p), jax.tree.leaves(y_d)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 100), n=st.integers(16, 600))
+def test_wire_bytes_monotone_in_ps_and_pq(seed, n):
+    """Within the sparse regime more aggressive compression never costs more
+    bytes, for every parameterized codec."""
+    tree = _tree(seed, n)
+    for name in ("dense", "packed", "threshold"):
+        sizes_s = [resolve_codec(name, p_s, 8).wire_bytes(tree)
+                   for p_s in (0.05, 0.1, 0.25, 0.5)]
+        assert sizes_s == sorted(sizes_s), (name, sizes_s)
+        sizes_q = [resolve_codec(name, 0.25, p_q).wire_bytes(tree)
+                   for p_q in (2, 4, 8, 16)]
+        assert sizes_q == sorted(sizes_q), (name, sizes_q)

@@ -1,12 +1,18 @@
-"""Compression invariants that hold without hypothesis (the property-test
-module tests/test_compression.py skips when hypothesis is absent):
-wire-size monotonicity in (p_s, p_q), lossless round trip at the identity
-point, shape-only size prediction, and Pallas-kernel-vs-dense parity."""
+"""Compression + codec invariants that hold without hypothesis (the
+property-test modules tests/test_compression.py and tests/test_codecs.py skip
+when hypothesis is absent): wire-size monotonicity in (p_s, p_q), lossless
+round trip at the identity point, shape-only size prediction,
+Pallas-kernel-vs-dense parity, and the codec-API acceptance invariants
+(packed bytes == analytic price, packed == dense bit-for-bit, the
+channel_for seam)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.codecs import (CODECS, DenseRefCodec, IdentityCodec,
+                               PackedBitstreamCodec, ThresholdGraphCodec,
+                               resolve_codec)
 from repro.core.compression import (compress_pytree, expected_pytree_wire_bytes,
                                     pytree_dense_bytes, pytree_wire_bytes,
                                     roundtrip_pytree, sparsify_quantize_dense,
@@ -77,6 +83,81 @@ def test_pallas_kernel_parity_with_dense(p_s, bits):
     assert both.mean() > p_s - 0.02
     level = float(np.abs(x).max()) / (2 ** (bits - 1) - 1)
     assert np.max(np.abs(dense[both] - kernel[both])) <= level + 1e-6
+
+
+# ----------------------------------------------------------------------
+# codec API (repro.core.codecs) acceptance invariants
+# ----------------------------------------------------------------------
+def test_bitpack_host_path_matches_jnp_kernels():
+    """pack_segments/BitReader run the packing formula in plain numpy (the
+    jit dispatch would dominate CPU encode); they must agree bit-for-bit
+    with the jnp kernels field_to_bits/bits_to_field (the TPU path)."""
+    from repro.kernels.bitpack import (BitReader, bits_to_field,
+                                       field_to_bits, pack_segments)
+    rng = np.random.RandomState(0)
+    for width in (1, 2, 7, 8, 13, 16, 32):
+        vals = rng.randint(0, 2 ** min(width, 31), size=57).astype(np.uint32)
+        bits = np.asarray(field_to_bits(jnp.asarray(vals), width))
+        payload = pack_segments([(vals, width)])
+        np.testing.assert_array_equal(
+            np.unpackbits(np.frombuffer(payload, np.uint8))[:bits.size], bits)
+        got = BitReader(payload).read(len(vals), width)
+        np.testing.assert_array_equal(got, vals)
+        np.testing.assert_array_equal(
+            np.asarray(bits_to_field(jnp.asarray(bits), width)), vals)
+
+
+def test_codec_registry_and_identity_fast_path():
+    assert set(CODECS) == {"identity", "dense", "threshold", "packed"}
+    # the uncompressed point resolves to identity for every family (the
+    # simulators' dense fast path), and instances are cached
+    for name in CODECS:
+        assert isinstance(resolve_codec(name, 1.0, 32), IdentityCodec)
+    assert resolve_codec("packed", 0.25, 8) is resolve_codec("packed", 0.25, 8)
+    with pytest.raises(ValueError, match="unknown codec"):
+        resolve_codec("zstd", 0.25, 8)
+
+
+@pytest.mark.parametrize("p_s,p_q", [(0.25, 8), (0.5, 16), (0.1, 4), (1.0, 8)])
+def test_packed_bytes_equal_analytic_price_on_cnn(tree, p_s, p_q):
+    """Acceptance: len() of the actual packed byte string equals the
+    analytic shape-only price on the FMNIST CNN pytree, exactly."""
+    codec = PackedBitstreamCodec(p_s, p_q)
+    wire = codec.encode(tree)
+    expected = expected_pytree_wire_bytes(tree, p_s, p_q)
+    assert isinstance(wire.payload, bytes)
+    assert len(wire.payload) == wire.nbytes == expected == codec.wire_bytes(tree)
+
+
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_packed_roundtrip_matches_dense_ref_bitwise(tree, stochastic):
+    """Acceptance: the packed stream decodes to exactly the DenseRefCodec
+    result — same mask, same scale, same dequant levels, and the same RNG
+    draw order under stochastic QSGD rounding."""
+    rng_a = np.random.RandomState(5) if stochastic else None
+    rng_b = np.random.RandomState(5) if stochastic else None
+    y_p, nb_p = PackedBitstreamCodec(0.25, 8).roundtrip(tree, rng=rng_a)
+    y_d, nb_d = DenseRefCodec(0.25, 8).roundtrip(tree, rng=rng_b)
+    assert nb_p == nb_d == expected_pytree_wire_bytes(tree, 0.25, 8)
+    for a, b in zip(jax.tree.leaves(y_p), jax.tree.leaves(y_d)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_channel_for_seam_binds_policy_to_codec_family():
+    from repro.fl.protocols import make_strategy
+    from repro.fl.simulator import SimConfig
+    cfg = SimConfig(n_devices=4, p_s=0.25, p_q=8, codec="packed")
+    s = make_strategy("teasq", cfg)
+    codec = s.channel_for(0)
+    assert isinstance(codec, PackedBitstreamCodec)
+    assert (codec.p_s, codec.p_q) == s.compression_at(0) == (0.25, 8)
+    # uncompressed protocols get identity regardless of the family
+    assert isinstance(make_strategy("tea", cfg).channel_for(0), IdentityCodec)
+    thr = make_strategy("teasq", SimConfig(n_devices=4, p_s=0.25, p_q=8,
+                                           codec="threshold",
+                                           cohort_channel_iters=9))
+    c_thr = thr.channel_for(0)
+    assert isinstance(c_thr, ThresholdGraphCodec) and c_thr.iters == 9
 
 
 @pytest.mark.parametrize("p_s,p_q", [(0.25, 8), (1.0, 8), (0.5, 32)])

@@ -22,8 +22,12 @@ def test_flops_trip_count_aware():
 
     c = jax.jit(f).lower(jnp.zeros((64, 64)), jnp.zeros((64, 64))).compile()
     assert hlo_flops(c.as_text()) == 7 * 2 * 64 ** 3
-    # XLA's own cost_analysis undercounts ~7x (documents why we need ours)
-    assert c.cost_analysis()["flops"] < 1.01 * 2 * 64 ** 3
+    # XLA's own cost_analysis undercounts ~7x (documents why we need ours);
+    # on some jax versions it returns a one-element list per device
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < 1.01 * 2 * 64 ** 3
 
 
 def test_flops_grad_counts_both_dots():

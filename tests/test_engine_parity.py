@@ -72,3 +72,20 @@ def test_parity_tea_uncompressed(tiny_setup):
     h_eng, h_leg = _run_both("tea", tiny_setup)
     assert h_eng[-1].round >= 1
     _histories_equal(h_eng, h_leg)
+
+
+def test_parity_packed_codec_drop_in(tiny_setup):
+    """SimConfig.codec='packed' transmits real bit-packed bytes yet must be
+    a drop-in for the dense reference codec: identical RNG draw order,
+    identical decoded trees, identical byte metering — so the whole LogEntry
+    history is bit-identical across codecs AND backends."""
+    data, parts, w0 = tiny_setup
+    kw = dict(time_budget=4.0, epochs=1, seed=3, p_s=0.25, p_q=8)
+    h_dense = run_method("teasq", data, parts, w0, backend="engine", **kw)
+    h_packed = run_method("teasq", data, parts, w0, backend="engine",
+                          codec="packed", **kw)
+    h_packed_leg = run_method("teasq", data, parts, w0, backend="legacy",
+                              codec="packed", **kw)
+    assert h_packed[-1].bytes_up > 0
+    _histories_equal(h_dense, h_packed)
+    _histories_equal(h_packed, h_packed_leg)
