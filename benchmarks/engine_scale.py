@@ -1,15 +1,18 @@
 """Engine scale demo: 1000-device TEASQ via the vectorized cohort path vs
 the legacy per-device Python loop at 100 devices, same dataset and virtual
-30 s budget.
+30 s budget — for any registered model family (``--task``).
 
-The comparison partitions one fixed 12k-sample dataset either 100 or 1000
-ways (so total sample throughput per virtual second is comparable), runs
-TEASQ (p_s=0.25, p_q=8) under a 200 kHz cell, and reports wall-clock,
-completed tasks, and aggregation rounds.  The vectorized run executes ~14x
-the protocol tasks of the legacy run; the acceptance bar is that it still
-finishes in less wall-clock.
+The comparison partitions one fixed dataset either 100 or 1000 ways (so
+total sample throughput per virtual second is comparable), runs TEASQ
+(p_s=0.25, p_q=8) under a 200 kHz cell, and reports wall-clock, completed
+tasks, and aggregation rounds.  The vectorized run executes many times the
+protocol tasks of the legacy run; the acceptance bar is that it still
+finishes in less wall-clock.  Results merge into
+results/engine_scale.json keyed per task, so the perf trajectory covers
+multiple model families side by side.
 
   PYTHONPATH=src python -m benchmarks.engine_scale [--budget 30] [--devices 1000]
+  PYTHONPATH=src python -m benchmarks.engine_scale --task transformer_lm
 """
 from __future__ import annotations
 
@@ -21,21 +24,21 @@ import time
 import jax
 
 from repro.core.latency import WirelessConfig
-from repro.data.synthetic import make_fmnist_like, partition_iid
+from repro.data.synthetic import partition_iid
 from repro.fl.protocols import make_sim
 from repro.fl.simulator import SimConfig
-from repro.models.cnn import init_cnn
+from repro.fl.tasks import TASKS, get_task
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "engine_scale.json")
 
 
 def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
-                 cohort_size: int = 0) -> SimConfig:
+                 cohort_size: int = 0, task: str = "fmnist_cnn") -> SimConfig:
     """TEASQ at N devices with a constant K=10 aggregation cache and a
     200 kHz cell (longer rounds keep the demo's virtual-task count sane)."""
     return SimConfig(
-        method="teasq", n_devices=n_devices, c_fraction=0.1,
+        method="teasq", task=task, n_devices=n_devices, c_fraction=0.1,
         gamma=10.0 / n_devices, epochs=1, batch_size=batch_size,
         p_s=0.25, p_q=8, seed=seed,
         wireless=WirelessConfig(bandwidth_hz=2e5),
@@ -43,18 +46,20 @@ def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
 
 
 def run_one(data, n_train: int, n_devices: int, backend: str,
-            cohort_size: int, budget: float, seed: int = 0) -> dict:
+            cohort_size: int, budget: float, seed: int = 0,
+            task: str = "fmnist_cnn") -> dict:
     parts = partition_iid(n_train, n_devices, seed)
-    w0 = init_cnn(jax.random.PRNGKey(seed))
-    cfg = scale_config(n_devices, seed=seed, cohort_size=cohort_size)
+    w0 = get_task(task).init_params(jax.random.PRNGKey(seed))
+    cfg = scale_config(n_devices, seed=seed, cohort_size=cohort_size,
+                       task=task)
     sim = make_sim(data, parts, w0, cfg, backend=backend)
     t0 = time.perf_counter()
     hist = sim.run(time_budget=budget, eval_every=10 ** 9)
     wall = time.perf_counter() - t0
     stats = getattr(sim, "stats", None)
     return {
-        "backend": backend, "n_devices": n_devices,
-        "cohort_size": cohort_size, "wall_s": wall,
+        "task": task, "backend": backend, "n_devices": n_devices,
+        "cohort_size": cohort_size, "wall_s": wall, "budget": budget,
         "rounds": hist[-1].round, "accuracy": hist[-1].accuracy,
         "bytes_up_mb": hist[-1].bytes_up / 1e6,
         "tasks": stats.completions if stats is not None else None,
@@ -66,10 +71,26 @@ def run(scale) -> list:
     """Suite entry point: full scale = the 30 s acceptance demo; quick scale
     shortens the budget to 10 s (same 1000-vs-100 device comparison)."""
     budget = 30.0 if scale.full else 10.0
-    data = make_fmnist_like(12000, 1000, seed=0)
+    task = get_task("fmnist_cnn")
+    data = task.make_data(12000, 1000, 0)
     rows = [run_one(data, 12000, 100, "legacy", 0, budget),
             run_one(data, 12000, 1000, "engine", 32, budget)]
     return rows
+
+
+def _merge_results(path: str, task: str, entry: dict) -> dict:
+    """Keep one entry per task so the CNN acceptance numbers and any other
+    family's runs live side by side in the same results file."""
+    out = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    # legacy layout (pre per-task keys) was the CNN run at top level
+    if "rows" in out:
+        out = {"fmnist_cnn": {k: out[k] for k in ("rows", "speedup", "budget")
+                              if k in out}}
+    out[task] = entry
+    return out
 
 
 def main():
@@ -79,26 +100,32 @@ def main():
     ap.add_argument("--legacy-devices", type=int, default=100)
     ap.add_argument("--cohort", type=int, default=32)
     ap.add_argument("--samples", type=int, default=12000)
+    ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
+                    help="model family to scale (default: %(default)s)")
     args = ap.parse_args()
 
-    data = make_fmnist_like(args.samples, 1000, seed=0)
+    data = get_task(args.task).make_data(args.samples, 1000, 0)
     rows = []
     for name, n, backend, cohort in [
             ("legacy", args.legacy_devices, "legacy", 0),
             ("engine_cohort", args.devices, "engine", args.cohort)]:
-        r = run_one(data, args.samples, n, backend, cohort, args.budget)
+        r = run_one(data, args.samples, n, backend, cohort, args.budget,
+                    task=args.task)
         rows.append(r)
-        print(f"engine_scale/{name}_n{n},{r['wall_s'] * 1e6 / max(r['rounds'], 1):.1f},"
+        print(f"engine_scale/{args.task}/{name}_n{n},"
+              f"{r['wall_s'] * 1e6 / max(r['rounds'], 1):.1f},"
               f"wall={r['wall_s']:.1f}s rounds={r['rounds']} "
               f"tasks={r['tasks']} acc={r['accuracy']:.3f}", flush=True)
 
     speedup = rows[0]["wall_s"] / rows[1]["wall_s"]
-    print(f"engine_scale/speedup,{speedup:.2f},"
+    print(f"engine_scale/{args.task}/speedup,{speedup:.2f},"
           f"vec@{args.devices} vs legacy@{args.legacy_devices}")
     os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)), exist_ok=True)
+    merged = _merge_results(RESULTS_PATH, args.task,
+                            {"rows": rows, "speedup": speedup,
+                             "budget": args.budget})
     with open(RESULTS_PATH, "w") as f:
-        json.dump({"rows": rows, "speedup": speedup,
-                   "budget": args.budget}, f, indent=1)
+        json.dump(merged, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,16 @@
 """End-to-end driver: the paper's full experiment at laptop scale.
 
-Trains the Fashion-MNIST CNN with all the paper's methods for a few hundred
-simulated seconds (several hundred aggregation rounds for the async methods)
-and prints the Table-5-style comparison.  Runs on the strategy-based
-``FLEngine`` by default; ``--backend legacy`` selects the monolithic
-reference simulator and ``--cohort 32`` enables vectorized cohort training.
+Trains the selected model family (``--task``: the Fashion-MNIST CNN by
+default, or any other entry in ``repro.fl.tasks.TASKS`` such as
+``transformer_lm`` / ``fmnist_mlp``) with all the paper's methods for a few
+hundred simulated seconds (several hundred aggregation rounds for the async
+methods) and prints the Table-5-style comparison.  Runs on the
+strategy-based ``FLEngine`` by default; ``--backend legacy`` selects the
+monolithic reference simulator and ``--cohort 32`` enables vectorized
+cohort training.
 
   PYTHONPATH=src python examples/fl_end_to_end.py [--budget 120] [--noniid]
+  PYTHONPATH=src python examples/fl_end_to_end.py --task transformer_lm
 """
 import argparse
 import time
@@ -15,6 +19,7 @@ from repro.core.codecs import CODECS
 from repro.core.dynamic import make_schedule
 from repro.fl.protocols import (best_acc_within, make_setup,
                                 profile_compression, run_method)
+from repro.fl.tasks import TASKS
 
 
 def main():
@@ -30,6 +35,12 @@ def main():
     ap.add_argument("--cohort", type=int, default=0,
                     help="engine cohort size (>0 = vectorized local "
                          "training for the async methods)")
+    ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
+                    help="model family to train (repro.fl.tasks.TASKS): the "
+                         "paper's FMNIST CNN, a tiny transformer LM on a "
+                         "synthetic token stream, or the FMNIST MLP — every "
+                         "task runs under every protocol (default: "
+                         "%(default)s)")
     ap.add_argument("--codec", choices=sorted(CODECS), default="dense",
                     help="wire codec for the compressed methods: TEASQ "
                          "defaults to 'dense' (the Algs. 3-4 reference codec "
@@ -43,8 +54,8 @@ def main():
     iid = not args.noniid
     data, parts, w0 = make_setup(n_devices=args.devices, iid=iid,
                                  n_train=args.samples,
-                                 n_test=args.samples // 5)
-    si, qi, trace = profile_compression(w0, data, theta=0.03)
+                                 n_test=args.samples // 5, task=args.task)
+    si, qi, trace = profile_compression(w0, data, theta=0.03, task=args.task)
     sched = make_schedule(si, qi, total_rounds=80)
     print(f"[alg5] searched static point: p_s={trace[-1][0] if trace else 1.0}"
           f" (idx {si}), p_q idx {qi}; {len(trace)} profile evals")
@@ -59,7 +70,7 @@ def main():
         hist = run_method(method, data, parts, w0, iid=iid,
                           time_budget=args.budget, epochs=1, eval_every=4,
                           backend=args.backend, cohort_size=args.cohort,
-                          codec=args.codec, **kw)
+                          codec=args.codec, task=args.task, **kw)
         best = max(h.accuracy for h in hist)
         rows.append((method, hist[-1].round, best,
                      hist[-1].bytes_up / 1e6, time.time() - t0))

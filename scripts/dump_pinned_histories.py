@@ -1,0 +1,50 @@
+"""Dump the parity-test LogEntry histories to a JSON fixture.
+
+Run this on a KNOWN-GOOD revision to (re)generate
+tests/data/pinned_histories.json, which tests/test_engine_parity.py then
+compares against bit-for-bit.  The fixture pins the default
+``SimConfig(task="fmnist_cnn")`` path across refactors: a change that
+perturbs RNG draw order, byte accounting, or aggregation numerics on the
+default path shows up as a fixture mismatch even if engine and legacy
+backends drift together.
+
+  PYTHONPATH=src python scripts/dump_pinned_histories.py
+"""
+import dataclasses
+import json
+import os
+
+from repro.fl.protocols import make_setup, run_method
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                   "pinned_histories.json")
+
+# The fixture records its own generation config: the parity test replays
+# exactly what the file says (and cross-checks it against its module
+# fixture), so the script and the test cannot drift apart silently.
+SETUP = dict(n_devices=8, iid=True, seed=3, n_train=640, n_test=320)
+RUN_KW = dict(time_budget=4.0, epochs=1, seed=3)
+RUNS = {
+    "teasq": dict(p_s=0.25, p_q=8),
+    "fedasync": {},
+    "fedavg": dict(devices_per_round=3),
+}
+
+
+def main():
+    data, parts, w0 = make_setup(**SETUP)
+    hists = {}
+    for method, kw in RUNS.items():
+        hist = run_method(method, data, parts, w0, backend="engine",
+                          **RUN_KW, **kw)
+        hists[method] = [dataclasses.asdict(h) for h in hist]
+        print(f"{method}: {len(hist)} entries, last round {hist[-1].round}")
+    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump({"setup": SETUP, "run_kw": RUN_KW, "runs": RUNS,
+                   "histories": hists}, f, indent=1)
+    print(f"wrote {os.path.abspath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,11 @@
 #
 # 1. the pinned tier-1 suite (ROADMAP.md):  python -m pytest -x -q
 #    (pytest.ini excludes the opt-in wall-clock `scale` marker)
-# 2. the fast smoke subset, which includes the benchmark harness smoke
-#    tests (tests/test_codec_throughput.py) — <60 s total
+# 2. the fast smoke subset: the benchmark harness smoke tests
+#    (tests/test_codec_throughput.py) and the FLTask registry conformance
+#    fast subset (tests/test_tasks.py — per-task loss/grad/cohort/codec
+#    checks on tiny configs; the end-to-end runs stay tier-1-only) —
+#    <60 s total
 #
 # Usage: scripts/tier1.sh [extra pytest args for the tier-1 run]
 set -euo pipefail

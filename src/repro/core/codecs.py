@@ -41,7 +41,7 @@ hand-picking one of the underlying implementations:
   FL stack's packed path.
 
 Protocols pick a codec family by name via ``SimConfig.codec`` and the
-``ProtocolStrategy.channel_for(t)`` seam; ``CODECS`` is the registry (new
+``ProtocolStrategy.channel_for(t, device_id=None)`` seam; ``CODECS`` is the registry (new
 codec = one subclass + one entry), ``resolve_codec`` binds a family name to
 the round's ``(p_s, p_q)`` operating point.
 """

@@ -9,6 +9,7 @@ from repro.fl.protocols import (METHODS, STRATEGIES, ProtocolStrategy,
                                 run_method, time_to_acc)
 from repro.fl.simulator import (FLSimulator, LogEntry, ScenarioConfig,
                                 SimConfig, TierSpec)
+from repro.fl.tasks import TASKS, FLTask, get_task, register_task
 
 __all__ = [
     # codec API re-export: FL code selects wire formats through this seam
@@ -20,19 +21,6 @@ __all__ = [
     "make_setup", "make_sim", "make_strategy", "profile_compression",
     "run_method", "time_to_acc",
     "FLSimulator", "LogEntry", "ScenarioConfig", "SimConfig", "TierSpec",
+    # task registry: per-model-family FL bundles (SimConfig.task)
+    "TASKS", "FLTask", "get_task", "register_task",
 ]
-
-
-def __getattr__(name):
-    # One-release deprecation shim: FL code used to reach for the raw
-    # ``roundtrip_pytree`` channel; the codec seam replaced it (use
-    # ``resolve_codec("dense", p_s, p_q).roundtrip(tree, rng=rng)``).
-    if name == "roundtrip_pytree":
-        import warnings
-        warnings.warn(
-            "importing roundtrip_pytree from repro.fl is deprecated and will "
-            "be removed next release; use repro.core.codecs.DenseRefCodec "
-            "(or resolve_codec) instead", DeprecationWarning, stacklevel=2)
-        from repro.core.compression import roundtrip_pytree
-        return roundtrip_pytree
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -11,12 +11,15 @@ Mapping to the paper (TEASQ-Fed, Algs. 1-2):
   ``SerialTrainer`` runs ``repro.core.client.local_update`` per device
   (bit-identical to the legacy ``FLSimulator``); ``CohortTrainer`` defers
   training and executes whole cohorts of concurrently-training devices in a
-  single jitted scan over the einsum-formulated CNN
-  (``repro.models.cnn.cnn_cohort_loss``), one compiled program per padded
-  cohort bucket.
+  single jitted scan over the bound task's vectorized ``cohort_loss``
+  (``repro.fl.tasks.FLTask`` — the einsum-formulated CNN for the default
+  ``fmnist_cnn`` task), one compiled program per padded cohort bucket.
+  Which model family trains is ``SimConfig.task``; the engine never touches
+  model internals beyond the task object.
 * **Algs. 3-4 (wire compression)** — the codec layer
   (``repro.core.codecs``): every dispatch asks the bound strategy for a
-  :class:`~repro.core.codecs.Codec` via ``channel_for(t)``; the serial path
+  :class:`~repro.core.codecs.Codec` via ``channel_for(t, device_id=k)``
+  (base policy device-blind; overrides can compress per device); the serial path
   runs ``codec.roundtrip`` (the faithful reference codec by default, the
   real bit-packed stream with ``SimConfig.codec="packed"``) while the
   cohort path fuses ``ThresholdGraphCodec.apply_tree`` into its jitted scan
@@ -53,7 +56,7 @@ from repro.core.latency import (comm_latency, device_rates,
                                 sample_compute_latency)
 from repro.core.server import ServerConfig, TeasqServer
 from repro.fl.simulator import LogEntry, ScenarioConfig, SimConfig
-from repro.models.cnn import cnn_accuracy, cnn_cohort_loss, cnn_loss
+from repro.fl.tasks import get_task
 
 
 # ----------------------------------------------------------------------
@@ -160,7 +163,7 @@ class SerialTrainer:
         idx = eng.partitions[k]
         x, y = eng.data["x_train"][idx], eng.data["y_train"][idx]
         w_new, _, _ = local_update(
-            w, x, y, cnn_loss, epochs=eng.cfg.epochs,
+            w, x, y, eng.task.loss, epochs=eng.cfg.epochs,
             batch_size=eng.cfg.batch_size, lr=eng.cfg.lr, mu=eng.cfg.mu,
             rng=eng.rng)
         return w_new, len(idx)
@@ -180,13 +183,17 @@ class PendingTask:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("lr", "mu", "p_s", "p_q", "iters"))
+                   static_argnames=("cohort_loss", "lr", "mu", "p_s", "p_q",
+                                    "iters"))
 def _cohort_round(w_versions, vidx, xs, ys, didx, bidx, valid, *,
-                  lr: float, mu: float, p_s: float, p_q: int, iters: int):
+                  cohort_loss, lr: float, mu: float, p_s: float, p_q: int,
+                  iters: int):
     """One fused cohort round: down-channel (per model version), E epochs of
-    prox-SGD for every device in the cohort (scan over steps, batched einsum
-    CNN), up-channel.  Shapes: w_versions leaves (V, ...); vidx/didx (C,);
-    xs/ys (N, n_max, ...); bidx (T, C, bs); valid (T, C)."""
+    prox-SGD for every device in the cohort (scan over steps, the task's
+    vectorized ``cohort_loss``), up-channel.  Shapes: w_versions leaves
+    (V, ...); vidx/didx (C,); xs/ys (N, n_max, ...); bidx (T, C, bs);
+    valid (T, C).  ``cohort_loss`` is static (a stable FLTask attribute, so
+    each task compiles once per bucket shape)."""
 
     channel = ThresholdGraphCodec(p_s, p_q, iters).apply_tree
 
@@ -197,10 +204,12 @@ def _cohort_round(w_versions, vidx, xs, ys, didx, bidx, valid, *,
 
     def step(params, sv):
         idx, v = sv                                   # (C, bs), (C,)
-        imgs = jnp.take_along_axis(
-            xd, idx[:, :, None, None, None], axis=1)
+        # broadcast the (C, bs) gather over the sample feature axes, whatever
+        # their rank (images (C, n, 28, 28, 1), token matrices (C, n, S), ...)
+        inputs = jnp.take_along_axis(
+            xd, idx.reshape(idx.shape + (1,) * (xd.ndim - 2)), axis=1)
         labs = jnp.take_along_axis(yd, idx, axis=1)
-        grads = jax.grad(cnn_cohort_loss)(params, imgs, labs)
+        grads = jax.grad(cohort_loss)(params, inputs, labs)
 
         def upd(p, g, a):
             vv = v.reshape((v.shape[0],) + (1,) * (p.ndim - 1))
@@ -234,7 +243,7 @@ class CohortTrainer:
         parts = engine.partitions
         n_max = max(len(idx) for idx in parts)
         x = engine.data["x_train"]
-        xs = np.zeros((len(parts), n_max) + x.shape[1:], np.float32)
+        xs = np.zeros((len(parts), n_max) + x.shape[1:], x.dtype)
         ys = np.zeros((len(parts), n_max), np.int32)
         for k, idx in enumerate(parts):
             xs[k, :len(idx)] = x[idx]
@@ -336,6 +345,7 @@ class CohortTrainer:
             w_versions, jnp.asarray(vidx), self.xs, self.ys,
             jnp.asarray(didx), jnp.asarray(np.swapaxes(bidx, 0, 1)),
             jnp.asarray(np.swapaxes(valid, 0, 1)),
+            cohort_loss=self.engine.task.cohort_loss,
             lr=cfg.lr, mu=cfg.mu, p_s=p_s, p_q=p_q,
             iters=self.channel_iters)
         # one bulk device->host transfer per leaf; per-task results are then
@@ -369,7 +379,8 @@ class FLEngine:
             n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
         self.channel = ChannelMeter()
         self.prev_local: Dict[int, Any] = {}      # MOON per-device state
-        self._eval = jax.jit(cnn_accuracy)
+        self.task = get_task(cfg.task)
+        self._eval = jax.jit(self.task.eval_metric)
         self.history: List[LogEntry] = []
         self.stats = EngineStats(completed_per_device=np.zeros(n, np.int64))
 
@@ -468,7 +479,7 @@ class FLEngine:
             return
         self.stats.dispatches += 1
         w_t, t0 = grant
-        codec = self.strategy.channel_for(t0)
+        codec = self.strategy.channel_for(t0, device_id=k)
 
         if self.scenario is not None and self.scenario.active:
             scen = self.scenario

@@ -22,11 +22,10 @@ import numpy as np
 from repro.core.codecs import Codec, resolve_codec
 from repro.core.dynamic import greedy_search
 from repro.core.staleness import staleness_weight
-from repro.data.synthetic import (make_fmnist_like, partition_iid,
-                                  partition_noniid_classes)
+from repro.data.synthetic import partition_iid, partition_noniid_classes
 from repro.fl.simulator import (FLSimulator, LogEntry, SimConfig,
                                 moon_local_train)
-from repro.models.cnn import cnn_accuracy, init_cnn
+from repro.fl.tasks import get_task
 
 METHODS = ("fedavg", "fedasync", "tea", "teas", "teaq", "teastatic",
            "teasq", "moon", "port", "asofed")
@@ -38,9 +37,12 @@ METHODS = ("fedavg", "fedasync", "tea", "teas", "teaq", "teastatic",
 class ProtocolStrategy(abc.ABC):
     """One FL protocol, bound to a SimConfig.  Engine hooks:
 
-    * ``channel_for(t)`` — the wire :class:`~repro.core.codecs.Codec` for a
-      task dispatched at round t (both directions); engines meter bytes via
-      ``codec.wire_bytes`` and apply loss via ``codec.roundtrip``.
+    * ``channel_for(t, device_id=None)`` — the wire
+      :class:`~repro.core.codecs.Codec` for a task dispatched at round t to
+      device ``device_id`` (both directions); engines meter bytes via
+      ``codec.wire_bytes`` and apply loss via ``codec.roundtrip``.  The base
+      policy is device-blind; overrides can vary the codec per device
+      (bandwidth-tier- or staleness-aware compression).
     * ``compression_at(t)`` — the (p_s, p_q) *policy* behind it (Alg. 5
       schedule or static point); protocols override this one-liner and the
       base ``channel_for`` binds it to the ``SimConfig.codec`` family.
@@ -61,9 +63,12 @@ class ProtocolStrategy(abc.ABC):
     def compression_at(self, t: int) -> Tuple[float, int]:
         return 1.0, 32
 
-    def channel_for(self, t: int) -> Codec:
-        """Codec for a round-``t`` dispatch: the strategy's (p_s, p_q) policy
-        bound to the configured codec family (``SimConfig.codec``)."""
+    def channel_for(self, t: int, device_id: Optional[int] = None) -> Codec:
+        """Codec for a round-``t`` dispatch to ``device_id``: the strategy's
+        (p_s, p_q) policy bound to the configured codec family
+        (``SimConfig.codec``).  The base policy ignores ``device_id``
+        (defaults to None for backward compatibility); per-device adaptive
+        strategies override this hook."""
         p_s, p_q = self.compression_at(t)
         return resolve_codec(self.cfg.codec, p_s, p_q,
                              iters=self.cfg.cohort_channel_iters)
@@ -185,13 +190,15 @@ class MoonStrategy(FedAvgStrategy):
 
     def local_train(self, engine, k, w_glob):
         cfg = self.cfg
+        task = engine.task
         idx = engine.partitions[k]
         x = engine.data["x_train"][idx]
         y = engine.data["y_train"][idx]
         prev = engine.prev_local.get(k, w_glob)
         params = moon_local_train(w_glob, prev, x, y, epochs=cfg.epochs,
                                   batch_size=cfg.batch_size, lr=cfg.lr,
-                                  rng=engine.rng)
+                                  rng=engine.rng, forward_fn=task.forward,
+                                  features_fn=task.features)
         engine.prev_local[k] = params
         return params, len(idx)
 
@@ -217,13 +224,17 @@ def make_strategy(method: str, cfg: SimConfig) -> ProtocolStrategy:
 # One-call drivers
 # ----------------------------------------------------------------------
 def make_setup(n_devices: int = 100, iid: bool = True, seed: int = 0,
-               n_train: int = 60000, n_test: int = 10000):
-    data = make_fmnist_like(n_train, n_test, seed=seed)
+               n_train: int = 60000, n_test: int = 10000,
+               task: str = "fmnist_cnn"):
+    """Synthetic (data, partitions, w0) for a registered FLTask — the
+    default is the paper's FMNIST CNN workload."""
+    t = get_task(task)
+    data = t.make_data(n_train, n_test, seed)
     if iid:
         parts = partition_iid(n_train, n_devices, seed)
     else:
         parts = partition_noniid_classes(data["y_train"], n_devices, 2, seed)
-    w0 = init_cnn(jax.random.PRNGKey(seed))
+    w0 = t.init_params(jax.random.PRNGKey(seed))
     return data, parts, w0
 
 
@@ -252,12 +263,14 @@ def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
 
 
 def profile_compression(w: Any, data: Dict[str, np.ndarray], theta: float = 0.02,
-                        seed: int = 0, codec: str = "dense"):
+                        seed: int = 0, codec: str = "dense",
+                        task: str = "fmnist_cnn"):
     """Algorithm 5 search on a profiling model ``w``, through the codec
-    seam (stochastic QSGD rounding, as the wire applies)."""
+    seam (stochastic QSGD rounding, as the wire applies).  Model-agnostic:
+    the accuracy oracle is the task's ``eval_metric``."""
     xs = data["x_test"][:2000]
     ys = data["y_test"][:2000]
-    eval_jit = jax.jit(cnn_accuracy)
+    eval_jit = jax.jit(get_task(task).eval_metric)
     rng = np.random.RandomState(seed)
 
     def eval_acc(p_s: float, p_q: int) -> float:

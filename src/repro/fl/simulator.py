@@ -2,9 +2,10 @@
 
 Faithfully executes the TEASQ-Fed protocol of Fig. 1 over N devices with the
 paper's wireless + shifted-exponential latency model, running *real* JAX
-local training (prox-SGD on the Fashion-MNIST-like CNN).  Also drives the
-baselines: FedAvg (synchronous), FedAsync (immediate update), TEA-Fed
-(no compression), TEAS/TEAQ/TEAStatic/TEASQ (compression variants).
+local training (prox-SGD on the model selected by ``SimConfig.task`` — the
+Fashion-MNIST-like CNN by default; see ``repro.fl.tasks.TASKS``).  Also
+drives the baselines: FedAvg (synchronous), FedAsync (immediate update),
+TEA-Fed (no compression), TEAS/TEAQ/TEAStatic/TEASQ (compression variants).
 """
 from __future__ import annotations
 
@@ -25,22 +26,26 @@ from repro.core.latency import (ComputeConfig, WirelessConfig, comm_latency,
                                 device_rates, sample_compute_latency)
 from repro.core.server import ServerConfig, TeasqServer
 from repro.core.staleness import staleness_weight
-from repro.models.cnn import cnn_accuracy, cnn_features, cnn_forward, cnn_loss
+from repro.fl.tasks import get_task
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "mu_con", "tau"))
-def _moon_sgd_step(params, batch, lr: float, mu_con: float, tau: float):
+@functools.partial(jax.jit, static_argnames=("lr", "mu_con", "tau",
+                                             "forward_fn", "features_fn"))
+def _moon_sgd_step(params, batch, lr: float, mu_con: float, tau: float,
+                   forward_fn, features_fn):
     """MOON (Li et al., CVPR'21) local step: CE + model-contrastive loss
     pulling representations toward the global model and away from the
-    device's previous local model."""
+    device's previous local model.  ``forward_fn``/``features_fn`` come from
+    the bound :class:`repro.fl.tasks.FLTask` (static: stable function
+    attributes, so re-resolving a task reuses the jit cache)."""
 
     def loss_fn(p):
-        logits = cnn_forward(p, batch["images"])
+        logits = forward_fn(p, batch["images"])
         logp = jax.nn.log_softmax(logits, axis=-1)
         ce = -jnp.take_along_axis(logp, batch["labels"][:, None], 1).mean()
-        z = cnn_features(p, batch["images"])
-        zg = cnn_features(batch["glob"], batch["images"])
-        zp = cnn_features(batch["prev"], batch["images"])
+        z = features_fn(p, batch["images"])
+        zg = features_fn(batch["glob"], batch["images"])
+        zp = features_fn(batch["prev"], batch["images"])
 
         def cos(a, b):
             return (a * b).sum(-1) / (jnp.linalg.norm(a, axis=-1)
@@ -56,11 +61,17 @@ def _moon_sgd_step(params, batch, lr: float, mu_con: float, tau: float):
 
 
 def moon_local_train(w_glob: Any, prev: Any, x, y, *, epochs: int,
-                     batch_size: int, lr: float,
-                     rng: np.random.RandomState) -> Any:
+                     batch_size: int, lr: float, rng: np.random.RandomState,
+                     forward_fn: Callable, features_fn: Callable) -> Any:
     """MOON device-side update: E epochs of `_moon_sgd_step` minibatches.
     Shared by the legacy simulator and the engine's MoonStrategy so the two
-    backends cannot drift apart."""
+    backends cannot drift apart.  Callers pass the bound task's
+    ``forward``/``features`` (MOON needs a representation head; tasks
+    without one cannot run this baseline)."""
+    if forward_fn is None or features_fn is None:
+        raise ValueError(
+            "MOON's model-contrastive term needs the task's forward and "
+            "features heads (FLTask.forward / FLTask.features)")
     params = w_glob
     for _ in range(epochs):
         order = rng.permutation(len(y))
@@ -70,7 +81,9 @@ def moon_local_train(w_glob: Any, prev: Any, x, y, *, epochs: int,
                      "labels": jnp.asarray(y[sel]),
                      "glob": w_glob, "prev": prev}
             params, _ = _moon_sgd_step(params, batch, lr,
-                                       mu_con=1.0, tau=0.5)
+                                       mu_con=1.0, tau=0.5,
+                                       forward_fn=forward_fn,
+                                       features_fn=features_fn)
     return params
 
 
@@ -117,6 +130,10 @@ class SimConfig:
     # port (async, unbounded concurrency + capped poly staleness weight),
     # asofed (async, staleness-adaptive local lr)
     method: str = "teasq"
+    # model family under training, resolved from repro.fl.tasks.TASKS
+    # ("fmnist_cnn" = the paper's §5.1 CNN; "transformer_lm", "fmnist_mlp",
+    # ... — any registered FLTask trains under any protocol)
+    task: str = "fmnist_cnn"
     n_devices: int = 100
     c_fraction: float = 0.1
     gamma: float = 0.1
@@ -182,11 +199,13 @@ class FLSimulator:
         self.max_up = 0
         self.max_down = 0
         self.prev_local: Dict[int, Any] = {}   # MOON: per-device prev model
-        self._eval = jax.jit(cnn_accuracy)
+        self.task = get_task(cfg.task)
+        self._eval = jax.jit(self.task.eval_metric)
         self.history: List[LogEntry] = []
         # the codec seam is shared with the engine: the bound strategy's
-        # channel_for(t) answers "which wire codec does a round-t dispatch
-        # use" for both simulators (lazy import: protocols imports us)
+        # channel_for(t, device_id) answers "which wire codec does a round-t
+        # dispatch to device k use" for both simulators (lazy import:
+        # protocols imports us)
         from repro.fl.protocols import make_strategy
         self.strategy = make_strategy(cfg.method, cfg)
 
@@ -197,7 +216,7 @@ class FLSimulator:
         if self.cfg.method == "moon":
             return self._train_device_moon(k, w, x, y), len(idx)
         w_new, _, steps = local_update(
-            w, x, y, cnn_loss, epochs=self.cfg.epochs,
+            w, x, y, self.task.loss, epochs=self.cfg.epochs,
             batch_size=self.cfg.batch_size, lr=self.cfg.lr, mu=self.cfg.mu,
             rng=self.rng)
         return w_new, len(idx)
@@ -206,7 +225,9 @@ class FLSimulator:
         prev = self.prev_local.get(k, w_glob)
         params = moon_local_train(w_glob, prev, x, y, epochs=self.cfg.epochs,
                                   batch_size=self.cfg.batch_size,
-                                  lr=self.cfg.lr, rng=self.rng)
+                                  lr=self.cfg.lr, rng=self.rng,
+                                  forward_fn=self.task.forward,
+                                  features_fn=self.task.features)
         self.prev_local[k] = params
         return params
 
@@ -281,7 +302,7 @@ class FLSimulator:
                     waiting.append(k)
                     continue
                 w_t, t0 = grant
-                codec = self.strategy.channel_for(t0)
+                codec = self.strategy.channel_for(t0, device_id=k)
                 w_recv, nbytes_down = codec.roundtrip(w_t, rng=self.rng)
                 self.bytes_down += nbytes_down
                 self.max_down = max(self.max_down, nbytes_down)

@@ -1,0 +1,209 @@
+"""Per-model FL task registry: the seam that makes the protocol stack
+model-agnostic.
+
+The paper's protocols (Algs. 1-2) and wire compression (Algs. 3-4) never
+look inside the model: Alg. 1's device process needs only "run E epochs of
+prox-SGD on the local objective", Alg. 2's server aggregates opaque weight
+pytrees, and Algs. 3-4 compress tensors leaf-by-leaf.  An :class:`FLTask`
+captures exactly that contract — everything the engine, the legacy
+simulator, and the protocol strategies need to train *some* model family
+under *any* protocol:
+
+* ``init_params(key)`` — model init from a PRNG key (Alg. 1 line 1's w^0).
+* ``loss(params, batch)`` — the device objective f_k (Eq. 5's loss term);
+  ``batch`` uses the historical keys ``{"images": inputs, "labels":
+  targets}`` shared with :func:`repro.core.client.local_update` (for the
+  LM task, ``"images"`` carries the token matrix).
+* ``eval_metric(params, x, y)`` — scalar in [0, 1] (accuracy-like), what
+  the simulators log per aggregation round.
+* ``cohort_loss(params, x, y)`` — the vectorized multi-device objective:
+  every params leaf carries a leading cohort axis C, inputs are
+  ``(C, B, ...)``, and the value is the mean over all cohort elements
+  (matching ``cnn_cohort_loss``; on a stacked singleton it equals the
+  serial ``loss``, which the conformance suite pins).  Each task picks the
+  formulation that lowers well: the CNN im2col's its convs into batched
+  einsums (``vmap``-of-conv lowers to ~8x-slower grouped convs on CPU —
+  the PR-1 lesson), while the transformer/MLP stacks are pure matmuls, so
+  ``vmap`` over the cohort axis already lowers to fast batched GEMMs.
+* ``make_data(n_train, n_test, seed)`` — synthetic dataset dict with the
+  ``{"x_train", "y_train", "x_test", "y_test"}`` keys the simulators and
+  partitioners consume.
+* ``forward`` / ``features`` — optional logits / penultimate-representation
+  functions; MOON's model-contrastive term needs ``features`` (tasks that
+  omit it simply can't run the MOON baseline).
+
+``TASKS`` maps ``SimConfig.task`` names to registered instances;
+``get_task`` resolves one.  Registering a new model family is one
+:class:`FLTask` construction — no protocol, engine, or codec code changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import make_fmnist_like
+from repro.models import mlp
+from repro.models import transformer as tfm
+from repro.models.cnn import (cnn_accuracy, cnn_cohort_loss, cnn_features,
+                              cnn_forward, cnn_loss, init_cnn)
+
+__all__ = ["FLTask", "TASKS", "get_task", "register_task"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FLTask:
+    """One model family's FL bundle (see module docstring for the contract).
+
+    Frozen so instances are safely shared and their function attributes are
+    stable objects — the simulators pass ``loss`` / ``cohort_loss`` /
+    ``eval_metric`` as static jit arguments, so re-resolving a task must
+    not retrigger compilation."""
+
+    name: str
+    init_params: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    eval_metric: Callable[[Any, jax.Array, jax.Array], jax.Array]
+    cohort_loss: Callable[[Any, jax.Array, jax.Array], jax.Array]
+    make_data: Callable[[int, int, int], Dict[str, np.ndarray]]
+    forward: Optional[Callable[[Any, jax.Array], jax.Array]] = None
+    features: Optional[Callable[[Any, jax.Array], jax.Array]] = None
+
+
+TASKS: Dict[str, FLTask] = {}
+
+
+def register_task(task: FLTask) -> FLTask:
+    if task.name in TASKS:
+        raise ValueError(f"task {task.name!r} already registered")
+    TASKS[task.name] = task
+    return task
+
+
+def get_task(name: str) -> FLTask:
+    try:
+        return TASKS[name]
+    except KeyError:
+        raise ValueError(f"unknown task {name!r}; "
+                         f"expected one of {sorted(TASKS)}") from None
+
+
+# ----------------------------------------------------------------------
+# fmnist_cnn — the paper's own workload (§5.1), moved behind the seam.
+# The function objects are the very same ones the pre-registry simulators
+# imported, so the default path's jit caches and numerics are untouched.
+# ----------------------------------------------------------------------
+register_task(FLTask(
+    name="fmnist_cnn",
+    init_params=init_cnn,
+    loss=cnn_loss,
+    eval_metric=cnn_accuracy,
+    cohort_loss=cnn_cohort_loss,
+    make_data=lambda n_train, n_test, seed: make_fmnist_like(
+        n_train, n_test, seed=seed),
+    forward=cnn_forward,
+    features=cnn_features,
+))
+
+
+# ----------------------------------------------------------------------
+# fmnist_mlp — one-hidden-layer MLP (repro.models.mlp) on the same
+# synthetic FMNIST images.  Deliberately minimal: the smallest non-CNN
+# family, cheap enough for the conformance suite's end-to-end runs on this
+# ~4 ms/dispatch CPU.
+# ----------------------------------------------------------------------
+register_task(FLTask(
+    name="fmnist_mlp",
+    init_params=mlp.init_mlp,
+    loss=mlp.mlp_loss,
+    eval_metric=mlp.mlp_accuracy,
+    cohort_loss=mlp.mlp_cohort_loss,
+    make_data=lambda n_train, n_test, seed: make_fmnist_like(
+        n_train, n_test, seed=seed),
+    forward=mlp.mlp_forward,
+    features=mlp.mlp_features,
+))
+
+
+# ----------------------------------------------------------------------
+# transformer_lm — a tiny decoder-only LM (repro.models.transformer stack)
+# on a synthetic copy-structured token stream.  Demonstrates that the
+# whole protocol/codec stack is model-shape-agnostic: inputs are int32
+# token matrices, the loss is next-token CE, and the "accuracy" logged per
+# round is next-token top-1.
+# ----------------------------------------------------------------------
+LM_SEQ_LEN = 16
+
+_LM_CFG = ModelConfig(
+    name="fl-transformer-lm", family="dense",
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+    tie_embeddings=True)
+
+
+def init_lm(key) -> Dict[str, Any]:
+    return tfm.init_model(key, _LM_CFG)
+
+
+def lm_forward(params, tokens: jax.Array) -> jax.Array:
+    logits, _ = tfm.forward(params, {"tokens": tokens}, _LM_CFG)
+    return logits
+
+
+def lm_task_loss(params, batch) -> jax.Array:
+    """Next-token CE; ``batch["images"]`` carries the (B, S) int32 tokens
+    (the historical batch key — see the module docstring)."""
+    loss, _ = tfm.lm_loss(params, {"tokens": batch["images"]}, _LM_CFG)
+    return loss
+
+
+def lm_accuracy(params, tokens, labels) -> jax.Array:
+    """Next-token top-1 over the sequence (``labels`` is a placeholder —
+    LM targets are the shifted tokens themselves)."""
+    del labels
+    logits = lm_forward(params, tokens)
+    return (logits[:, :-1].argmax(-1) == tokens[:, 1:]).mean()
+
+
+def lm_cohort_loss(params, tokens: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-device-weights LM: leaves (C, ...), tokens (C, B, S).  The stack
+    is matmuls end-to-end, so vmap over the cohort axis lowers straight to
+    batched GEMMs (no grouped-conv trap here)."""
+    del labels
+    per_device = jax.vmap(
+        lambda p, t: tfm.lm_loss(p, {"tokens": t}, _LM_CFG)[0])(params, tokens)
+    return per_device.mean()
+
+
+def make_lm_data(n_train: int, n_test: int, seed: int = 0,
+                 seq: int = LM_SEQ_LEN) -> Dict[str, np.ndarray]:
+    """Copy-structured token stream (second half = first half shifted by 1)
+    so next-token loss genuinely decreases.  ``y_*`` are 10-way pseudo-labels
+    bucketed from the leading token: the LM objective ignores them, but the
+    label-skew partitioners (paper non-IID split) need real classes to skew
+    device data by — here, by a sequence's opening token range."""
+    vocab = _LM_CFG.vocab
+
+    def gen(n, rs):
+        toks = rs.randint(0, vocab, size=(n, seq)).astype(np.int32)
+        half = seq // 2
+        toks[:, half:half * 2] = (toks[:, :half] + 1) % vocab
+        return toks, (toks[:, 0] * 10 // vocab).astype(np.int32)
+
+    xtr, ytr = gen(n_train, np.random.RandomState(seed))
+    xte, yte = gen(n_test, np.random.RandomState(seed + 1))
+    return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}
+
+
+register_task(FLTask(
+    name="transformer_lm",
+    init_params=init_lm,
+    loss=lm_task_loss,
+    eval_metric=lm_accuracy,
+    cohort_loss=lm_cohort_loss,
+    make_data=make_lm_data,
+    forward=lm_forward,
+    features=None,            # no contrastive head: MOON is CNN/MLP-only
+))

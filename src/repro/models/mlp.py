@@ -1,0 +1,67 @@
+"""One-hidden-layer MLP on 28x28 grayscale images.
+
+The smallest non-CNN family in the FL task registry
+(``repro.fl.tasks.TASKS`` entry ``fmnist_mlp``): cheap enough for the
+conformance suite's end-to-end runs on a ~4 ms/dispatch CPU, while still
+exercising every protocol/codec path with a non-CNN parameter pytree.
+
+Mirrors the CNN module's layout: serial ``mlp_forward``/``mlp_loss``/
+``mlp_accuracy``/``mlp_features`` plus the vectorized per-device-weights
+``mlp_cohort_loss`` (batched einsum GEMMs — same form as the CNN cohort
+head, and trivially safe from the vmap-of-conv grouped-convolution trap).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MLP_HIDDEN = 64
+
+
+def init_mlp(key, n_classes: int = 10, hidden: int = MLP_HIDDEN
+             ) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    d_in = 28 * 28
+
+    def unif(k, shape, fan_in):
+        s = 1.0 / np.sqrt(fan_in)
+        return jax.random.uniform(k, shape, jnp.float32, -s, s)
+
+    return {"w1": unif(k1, (d_in, hidden), d_in),
+            "b1": jnp.zeros((hidden,)),
+            "w2": unif(k2, (hidden, n_classes), hidden),
+            "b2": jnp.zeros((n_classes,))}
+
+
+def mlp_features(params, images: jax.Array) -> jax.Array:
+    """Penultimate representation (MOON's contrastive term)."""
+    x = images.reshape(images.shape[0], -1)
+    return jax.nn.relu(x @ params["w1"] + params["b1"])
+
+
+def mlp_forward(params, images: jax.Array) -> jax.Array:
+    """images: (B, 28, 28, 1) -> logits (B, n_classes)."""
+    return mlp_features(params, images) @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch) -> jax.Array:
+    logp = jax.nn.log_softmax(mlp_forward(params, batch["images"]), axis=-1)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1).mean()
+
+
+def mlp_accuracy(params, images, labels) -> jax.Array:
+    return (mlp_forward(params, images).argmax(-1) == labels).mean()
+
+
+def mlp_cohort_loss(params, images: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-device-weights MLP: leaves (C, ...), images (C, B, 28, 28, 1)."""
+    x = images.reshape(images.shape[0], images.shape[1], -1)
+    h = jax.nn.relu(jnp.einsum("cbk,cko->cbo", x, params["w1"])
+                    + params["b1"][:, None, :])
+    logits = (jnp.einsum("cbk,cko->cbo", h, params["w2"])
+              + params["b2"][:, None, :])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()

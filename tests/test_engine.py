@@ -15,7 +15,7 @@ from repro.fl.protocols import (METHODS, STRATEGIES, make_setup, make_sim,
                                 make_strategy, run_method)
 from repro.fl.simulator import (FLSimulator, ScenarioConfig, SimConfig,
                                 TierSpec)
-from repro.models.cnn import cnn_loss, init_cnn
+from repro.models.cnn import cnn_cohort_loss, cnn_loss, init_cnn
 
 
 # ----------------------------------------------------------------------
@@ -114,7 +114,7 @@ def test_cohort_round_matches_serial_prox_sgd():
         jnp.zeros(1, jnp.int32), jnp.asarray(x[None]), jnp.asarray(y[None]),
         jnp.zeros(1, jnp.int32), jnp.asarray(bidx[:, None, :]),
         jnp.ones((steps, 1), jnp.float32),
-        lr=lr, mu=mu, p_s=1.0, p_q=32, iters=8)
+        cohort_loss=cnn_cohort_loss, lr=lr, mu=mu, p_s=1.0, p_q=32, iters=8)
     for leaf_ref, leaf_vec in zip(jax.tree.leaves(params),
                                   jax.tree.leaves(w_up)):
         np.testing.assert_allclose(np.asarray(leaf_ref),

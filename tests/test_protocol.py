@@ -116,3 +116,50 @@ def test_simulator_fedasync_runs(tiny_setup):
     data, parts, w0 = tiny_setup
     hist = run_method("fedasync", data, parts, w0, time_budget=6.0, epochs=1)
     assert hist[-1].round >= 2
+
+
+# -- per-device codec seam: channel_for(t, device_id) ---------------------
+def test_channel_for_device_id_default_and_override(tiny_setup):
+    """The codec seam carries the target device: the base policy is
+    device-blind (and still answers the legacy one-arg call), while a
+    strategy override can pick a per-device codec — the hook for
+    bandwidth-tier-aware compression."""
+    from repro.core.codecs import resolve_codec
+    from repro.fl.engine import FLEngine
+    from repro.fl.protocols import TeasqStrategy
+    from repro.fl.simulator import SimConfig
+
+    data, parts, w0 = tiny_setup
+    cfg = SimConfig(method="teasq", n_devices=len(parts), p_s=0.25, p_q=8,
+                    epochs=1, batch_size=8, seed=0, c_fraction=0.5,
+                    gamma=0.25)
+
+    # backward-compatible default: one-arg call works, device is ignored
+    base = TeasqStrategy(cfg)
+    assert base.channel_for(0).wire_bytes(w0) == \
+        base.channel_for(0, device_id=3).wire_bytes(w0)
+
+    class EvenDevicesUncompressed(TeasqStrategy):
+        def __init__(self, cfg):
+            super().__init__(cfg)
+            self.seen = []
+
+        def channel_for(self, t, device_id=None):
+            self.seen.append(device_id)
+            if device_id is not None and device_id % 2 == 0:
+                return resolve_codec("identity")
+            return super().channel_for(t, device_id)
+
+    strat = EvenDevicesUncompressed(cfg)
+    eng = FLEngine(data, parts, w0, cfg, strategy=strat)
+    hist = eng.run(time_budget=2.0, eval_every=10 ** 9)
+    assert strat.seen and all(d is not None for d in strat.seen)
+    assert {d % 2 for d in strat.seen} == {0, 1}
+    # even devices shipped dense f32, odd the compressed stream; every
+    # dispatch was priced by exactly the codec its device was handed
+    dense = resolve_codec("identity").wire_bytes(w0)
+    compressed = base.channel_for(0).wire_bytes(w0)
+    assert compressed < dense
+    assert hist[-1].max_model_bytes_down == dense
+    expected = sum(dense if d % 2 == 0 else compressed for d in strat.seen)
+    assert hist[-1].bytes_down == expected

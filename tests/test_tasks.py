@@ -1,0 +1,196 @@
+"""FLTask registry conformance suite.
+
+Every entry in ``repro.fl.tasks.TASKS`` must satisfy the task contract the
+protocol stack assumes (see the tasks module docstring): finite loss and
+gradients, a vectorized ``cohort_loss`` that collapses to the serial
+``loss`` on a stacked singleton, an eval metric bounded in [0, 1], and a
+param pytree every wire codec can round-trip.  Plus end-to-end: a non-CNN
+task completes a short TEASQ run through the real bit-packed codec on both
+simulator backends.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.codecs import resolve_codec
+from repro.fl.protocols import make_setup, run_method
+from repro.fl.tasks import TASKS, FLTask, get_task, register_task
+
+TASK_NAMES = sorted(TASKS)
+
+
+@pytest.fixture(scope="module")
+def task_fixture():
+    """(task, params, tiny train batch, test arrays) per registered task."""
+    out = {}
+    for name in TASK_NAMES:
+        t = TASKS[name]
+        data = t.make_data(32, 16, 0)
+        params = t.init_params(jax.random.PRNGKey(0))
+        batch = {"images": jnp.asarray(data["x_train"][:8]),
+                 "labels": jnp.asarray(data["y_train"][:8])}
+        out[name] = (t, params, batch, data)
+    return out
+
+
+# ----------------------------------------------------------------------
+# registry basics
+# ----------------------------------------------------------------------
+@pytest.mark.smoke
+def test_registry_has_cnn_and_two_more():
+    assert "fmnist_cnn" in TASKS
+    assert len(TASKS) >= 3
+
+
+@pytest.mark.smoke
+def test_get_task_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown task"):
+        get_task("resnet152")
+
+
+@pytest.mark.smoke
+def test_register_rejects_duplicate():
+    t = TASKS["fmnist_cnn"]
+    with pytest.raises(ValueError, match="already registered"):
+        register_task(dataclasses.replace(t))
+
+
+# ----------------------------------------------------------------------
+# per-task conformance
+# ----------------------------------------------------------------------
+@pytest.mark.smoke
+@pytest.mark.parametrize("name", TASK_NAMES)
+def test_loss_and_grad_finite(name, task_fixture):
+    t, params, batch, _ = task_fixture[name]
+    loss = t.loss(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(t.loss)(params, batch)
+    assert jax.tree.structure(grads) == jax.tree.structure(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("name", TASK_NAMES)
+def test_cohort_singleton_matches_serial_loss(name, task_fixture):
+    """A cohort of one device with the serial minibatch must produce the
+    serial loss — the invariant that lets CohortTrainer substitute the
+    vectorized path for SerialTrainer."""
+    t, params, batch, _ = task_fixture[name]
+    serial = float(t.loss(params, batch))
+    stacked = jax.tree.map(lambda a: a[None], params)
+    cohort = float(t.cohort_loss(stacked, batch["images"][None],
+                                 batch["labels"][None]))
+    np.testing.assert_allclose(cohort, serial, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("name", TASK_NAMES)
+def test_eval_metric_bounded(name, task_fixture):
+    t, params, _, data = task_fixture[name]
+    m = float(t.eval_metric(params, jnp.asarray(data["x_test"]),
+                            jnp.asarray(data["y_test"])))
+    assert 0.0 <= m <= 1.0
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("name", TASK_NAMES)
+def test_param_pytree_codec_roundtrip(name, task_fixture):
+    """Every task's weights must survive the wire: the packed bitstream
+    decode must be finite, shape-preserving, and bit-identical to the dense
+    reference codec at the same operating point."""
+    t, params, _, _ = task_fixture[name]
+    rng_a, rng_b = np.random.RandomState(7), np.random.RandomState(7)
+    dec_p, nbytes_p = resolve_codec("packed", 0.25, 8).roundtrip(
+        params, rng=rng_a)
+    dec_d, nbytes_d = resolve_codec("dense", 0.25, 8).roundtrip(
+        params, rng=rng_b)
+    assert nbytes_p == nbytes_d > 0
+    assert jax.tree.structure(dec_p) == jax.tree.structure(params)
+    for orig, a, b in zip(jax.tree.leaves(params), jax.tree.leaves(dec_p),
+                          jax.tree.leaves(dec_d)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == np.asarray(orig).shape
+        assert np.all(np.isfinite(a))
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("name", TASK_NAMES)
+def test_make_data_contract(name, task_fixture):
+    t, _, _, data = task_fixture[name]
+    assert set(data) >= {"x_train", "y_train", "x_test", "y_test"}
+    assert len(data["x_train"]) == len(data["y_train"]) == 32
+    assert len(data["x_test"]) == len(data["y_test"]) == 16
+
+
+# ----------------------------------------------------------------------
+# end-to-end: non-CNN tasks through the whole protocol/codec stack
+# ----------------------------------------------------------------------
+def test_mlp_teasq_packed_both_backends():
+    """A non-CNN task completes a short TEASQ run through the real
+    bit-packed codec on both backends — and, since the serial path is
+    task-generic, the two histories are bit-identical."""
+    data, parts, w0 = make_setup(n_devices=4, iid=True, seed=0, n_train=96,
+                                 n_test=48, task="fmnist_mlp")
+    kw = dict(time_budget=3.0, epochs=1, batch_size=8, seed=0,
+              codec="packed", task="fmnist_mlp", p_s=0.25, p_q=8)
+    h_eng = run_method("teasq", data, parts, w0, backend="engine", **kw)
+    h_leg = run_method("teasq", data, parts, w0, backend="legacy", **kw)
+    assert h_eng[-1].round >= 1
+    assert h_eng[-1].bytes_up > 0
+    assert np.isfinite(h_eng[-1].accuracy)
+    assert h_eng == h_leg
+
+
+def test_transformer_lm_teasq_serial_and_cohort():
+    """The transformer LM trains under TEASQ on the engine, both on the
+    serial path and the vectorized cohort path (packed codec throughout)."""
+    data, parts, w0 = make_setup(n_devices=4, iid=True, seed=0, n_train=64,
+                                 n_test=32, task="transformer_lm")
+    kw = dict(time_budget=2.0, epochs=1, batch_size=8, seed=0,
+              codec="packed", task="transformer_lm", p_s=0.25, p_q=8,
+              backend="engine")
+    h = run_method("teasq", data, parts, w0, **kw)
+    assert h[-1].round >= 1 and h[-1].bytes_up > 0
+    assert np.isfinite(h[-1].accuracy)
+    h_c = run_method("teasq", data, parts, w0, cohort_size=2, **kw)
+    assert h_c[-1].round >= 1
+    assert np.isfinite(h_c[-1].accuracy)
+
+
+@pytest.mark.smoke
+def test_lm_noniid_partition_has_label_skew():
+    """The LM's pseudo-labels (leading-token buckets) must drive the paper's
+    non-IID split — all-zero placeholder labels used to crash the
+    partitioner."""
+    data, parts, _ = make_setup(n_devices=8, iid=False, seed=0, n_train=400,
+                                n_test=40, task="transformer_lm")
+    labels = data["y_train"]
+    assert len(np.unique(labels)) == 10
+    for p in parts:
+        assert len(set(labels[p])) == 2       # classes_per_device
+
+
+def test_moon_requires_features():
+    """Tasks without a representation head fail fast on MOON instead of
+    producing a confusing trace inside the contrastive term."""
+    data, parts, w0 = make_setup(n_devices=4, iid=True, seed=0, n_train=64,
+                                 n_test=32, task="transformer_lm")
+    with pytest.raises(ValueError, match="features"):
+        run_method("moon", data, parts, w0, time_budget=1.0, epochs=1,
+                   batch_size=8, seed=0, task="transformer_lm",
+                   devices_per_round=2, backend="engine")
+
+
+@pytest.mark.smoke
+def test_task_is_frozen():
+    """Function attributes must be stable objects (static jit args)."""
+    t = get_task("fmnist_cnn")
+    assert isinstance(t, FLTask)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.loss = None
+    assert get_task("fmnist_cnn").loss is t.loss
