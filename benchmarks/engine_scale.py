@@ -11,12 +11,20 @@ finishes in less wall-clock.  Results merge into
 results/engine_scale.json keyed per task, so the perf trajectory covers
 multiple model families side by side.
 
+``--tiered`` switches to the tier-aware codec-policy demo: a heterogeneous
+three-tier fleet where the ``tier_aware`` policy gives slow-bandwidth tiers
+aggressively packed updates while full-rate tiers stay near-dense; per-tier
+uplink totals are metered exactly and logged under the task's
+``tier_aware`` key.
+
   PYTHONPATH=src python -m benchmarks.engine_scale [--budget 30] [--devices 1000]
   PYTHONPATH=src python -m benchmarks.engine_scale --task transformer_lm
+  PYTHONPATH=src python -m benchmarks.engine_scale --tiered --devices 120 --samples 6000 --budget 6
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -26,7 +34,7 @@ import jax
 from repro.core.latency import WirelessConfig
 from repro.data.synthetic import partition_iid
 from repro.fl.protocols import make_sim
-from repro.fl.simulator import SimConfig
+from repro.fl.simulator import ScenarioConfig, SimConfig, TierSpec
 from repro.fl.tasks import TASKS, get_task
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -67,6 +75,61 @@ def run_one(data, n_train: int, n_devices: int, backend: str,
     }
 
 
+def tier_scenario() -> ScenarioConfig:
+    """The demo fleet: a quarter full-rate, the rest on progressively
+    slower links/compute — the heterogeneity the tier_aware policy prices
+    per device."""
+    return ScenarioConfig(tiers=[
+        TierSpec(0.25, compute_scale=1.0, bandwidth_scale=1.0, name="fast"),
+        TierSpec(0.375, compute_scale=1.5, bandwidth_scale=0.5, name="mid"),
+        TierSpec(0.375, compute_scale=2.5, bandwidth_scale=0.125,
+                 name="slow"),
+    ])
+
+
+def run_tiered(data, n_train: int, n_devices: int, budget: float,
+               seed: int = 0, task: str = "fmnist_cnn") -> dict:
+    """Tier-aware codec-policy run: heterogeneous bandwidth tiers, a
+    per-device codec from the ``tier_aware`` policy, and per-tier uplink
+    metering (``ChannelMeter.tier_up``).  The acceptance property logged
+    here: the slowest bandwidth tier's metered uplink bytes are strictly
+    below the fastest tier's, both in total and per transfer."""
+    parts = partition_iid(n_train, n_devices, seed)
+    w0 = get_task(task).init_params(jax.random.PRNGKey(seed))
+    cfg = dataclasses.replace(
+        scale_config(n_devices, seed=seed, cohort_size=0, task=task),
+        scenario=tier_scenario(), codec_policy="tier_aware")
+    sim = make_sim(data, parts, w0, cfg, backend="engine")
+    t0 = time.perf_counter()
+    hist = sim.run(time_budget=budget, eval_every=10 ** 9)
+    wall = time.perf_counter() - t0
+    per_tier = []
+    for i, t in enumerate(cfg.scenario.tiers):
+        sel = sim.devices.tier == i
+        n_tier = int(sel.sum())
+        if n_tier:   # tiny fleets can round a tier down to zero devices
+            codec = sim.strategy.channel_for(0, device_id=int(sel.argmax()))
+            p_s, p_q = codec.p_s, codec.p_q
+            per_upload = codec.wire_bytes(w0)
+        else:
+            p_s = p_q = per_upload = None
+        per_tier.append({
+            "tier": t.name, "bandwidth_scale": t.bandwidth_scale,
+            "devices": n_tier,
+            "p_s": p_s, "p_q": p_q,
+            "bytes_per_upload": per_upload,
+            "uplink_bytes": sim.channel.tier_up.get(i, 0),
+            "downlink_bytes": sim.channel.tier_down.get(i, 0),
+            "completions": int(sim.stats.completed_per_device[sel].sum()),
+        })
+    return {
+        "task": task, "n_devices": n_devices, "budget": budget,
+        "wall_s": wall, "rounds": hist[-1].round,
+        "accuracy": hist[-1].accuracy,
+        "bytes_up_mb": hist[-1].bytes_up / 1e6, "per_tier": per_tier,
+    }
+
+
 def run(scale) -> list:
     """Suite entry point: full scale = the 30 s acceptance demo; quick scale
     shortens the budget to 10 s (same 1000-vs-100 device comparison)."""
@@ -79,8 +142,11 @@ def run(scale) -> list:
 
 
 def _merge_results(path: str, task: str, entry: dict) -> dict:
-    """Keep one entry per task so the CNN acceptance numbers and any other
-    family's runs live side by side in the same results file."""
+    """Keep one entry per task so the CNN acceptance numbers, any other
+    family's runs, and the tier-aware policy run live side by side in the
+    same results file.  ``entry`` keys merge into the task's existing dict
+    (so a scale run does not clobber a logged ``tier_aware`` run and vice
+    versa)."""
     out = {}
     if os.path.exists(path):
         with open(path) as f:
@@ -89,7 +155,7 @@ def _merge_results(path: str, task: str, entry: dict) -> dict:
     if "rows" in out:
         out = {"fmnist_cnn": {k: out[k] for k in ("rows", "speedup", "budget")
                               if k in out}}
-    out[task] = entry
+    out[task] = {**out.get(task, {}), **entry}
     return out
 
 
@@ -102,9 +168,30 @@ def main():
     ap.add_argument("--samples", type=int, default=12000)
     ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
                     help="model family to scale (default: %(default)s)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="run the tier_aware codec-policy demo instead of "
+                         "the scale race: heterogeneous bandwidth tiers, "
+                         "per-device codecs, per-tier uplink metering "
+                         "(logged under the task's 'tier_aware' key)")
     args = ap.parse_args()
 
     data = get_task(args.task).make_data(args.samples, 1000, 0)
+
+    if args.tiered:
+        r = run_tiered(data, args.samples, args.devices, args.budget,
+                       task=args.task)
+        for row in r["per_tier"]:
+            print(f"engine_scale/{args.task}/tier_{row['tier']},"
+                  f"{row['uplink_bytes']},"
+                  f"bw={row['bandwidth_scale']} point=({row['p_s']},"
+                  f"{row['p_q']}) per_upload={row['bytes_per_upload']}B "
+                  f"completions={row['completions']}", flush=True)
+        os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
+                    exist_ok=True)
+        merged = _merge_results(RESULTS_PATH, args.task, {"tier_aware": r})
+        with open(RESULTS_PATH, "w") as f:
+            json.dump(merged, f, indent=1)
+        return
     rows = []
     for name, n, backend, cohort in [
             ("legacy", args.legacy_devices, "legacy", 0),

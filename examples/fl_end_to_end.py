@@ -9,16 +9,23 @@ strategy-based ``FLEngine`` by default; ``--backend legacy`` selects the
 monolithic reference simulator and ``--cohort 32`` enables vectorized
 cohort training.
 
+``--codec-policy tier_aware`` demos the adaptive per-device codec layer: a
+heterogeneous 3-tier fleet where the per-tier Alg. 5 search gives each
+bandwidth tier its own (p_s, p_q) operating point.
+
   PYTHONPATH=src python examples/fl_end_to_end.py [--budget 120] [--noniid]
   PYTHONPATH=src python examples/fl_end_to_end.py --task transformer_lm
+  PYTHONPATH=src python examples/fl_end_to_end.py --codec-policy tier_aware
 """
 import argparse
 import time
 
 from repro.core.codecs import CODECS
 from repro.core.dynamic import make_schedule
+from repro.fl.policies import POLICIES
 from repro.fl.protocols import (best_acc_within, make_setup,
                                 profile_compression, run_method)
+from repro.fl.simulator import ScenarioConfig, TierSpec
 from repro.fl.tasks import TASKS
 
 
@@ -49,6 +56,17 @@ def main():
                          "'threshold' the approximate in-graph channel, "
                          "'identity' disables compression (default: "
                          "%(default)s)")
+    ap.add_argument("--codec-policy", choices=sorted(POLICIES),
+                    default="static",
+                    help="per-device codec policy (SimConfig.codec_policy, "
+                         "repro.fl.policies.POLICIES): 'static' keeps each "
+                         "protocol's global Alg. 5 operating point; "
+                         "'tier_aware' installs a heterogeneous 3-tier "
+                         "fleet and runs the per-tier Alg. 5 search so "
+                         "slow-bandwidth tiers ship aggressively packed "
+                         "updates while full-rate tiers stay near-dense; "
+                         "'staleness_aware' adds compression notches for "
+                         "chronically stale devices (default: %(default)s)")
     args = ap.parse_args()
 
     iid = not args.noniid
@@ -60,6 +78,22 @@ def main():
     print(f"[alg5] searched static point: p_s={trace[-1][0] if trace else 1.0}"
           f" (idx {si}), p_q idx {qi}; {len(trace)} profile evals")
 
+    policy_kw = {}
+    if args.codec_policy != "static":
+        # a demo heterogeneous fleet for the adaptive policies: a quarter of
+        # devices at full rate, the rest on progressively slower links
+        tiers = [TierSpec(0.25, 1.0, 1.0, "fast"),
+                 TierSpec(0.375, 1.5, 0.5, "mid"),
+                 TierSpec(0.375, 2.5, 0.125, "slow")]
+        policy_kw = dict(codec_policy=args.codec_policy,
+                         scenario=ScenarioConfig(tiers=tiers))
+        if args.codec_policy == "tier_aware":
+            tier_points, _ = profile_compression(w0, data, theta=0.03,
+                                                 task=args.task, tiers=tiers)
+            policy_kw["tier_points"] = tier_points
+            print(f"[alg5] per-tier points "
+                  f"{[t.name for t in tiers]}: {tier_points}")
+
     rows = []
     for method, kw in [("fedavg", {}),
                        ("fedasync", {}),
@@ -70,7 +104,8 @@ def main():
         hist = run_method(method, data, parts, w0, iid=iid,
                           time_budget=args.budget, epochs=1, eval_every=4,
                           backend=args.backend, cohort_size=args.cohort,
-                          codec=args.codec, task=args.task, **kw)
+                          codec=args.codec, task=args.task, **policy_kw,
+                          **kw)
         best = max(h.accuracy for h in hist)
         rows.append((method, hist[-1].round, best,
                      hist[-1].bytes_up / 1e6, time.time() - t0))

@@ -8,6 +8,9 @@
 #    fast subset (tests/test_tasks.py — per-task loss/grad/cohort/codec
 #    checks on tiny configs; the end-to-end runs stay tier-1-only) —
 #    <60 s total
+# 3. the docs check: tests/test_docs.py parses the fenced commands in
+#    README.md and docs/*.md and verifies every referenced file and flag
+#    exists (so the documentation front door cannot silently rot)
 #
 # Usage: scripts/tier1.sh [extra pytest args for the tier-1 run]
 set -euo pipefail
@@ -19,3 +22,6 @@ python -m pytest -x -q "$@"
 
 echo "[tier1] smoke subset: python -m pytest -m smoke -q"
 python -m pytest -m smoke -q
+
+echo "[tier1] docs check: python -m pytest tests/test_docs.py -m smoke -q"
+python -m pytest tests/test_docs.py -m smoke -q

@@ -43,7 +43,12 @@ hand-picking one of the underlying implementations:
 Protocols pick a codec family by name via ``SimConfig.codec`` and the
 ``ProtocolStrategy.channel_for(t, device_id=None)`` seam; ``CODECS`` is the registry (new
 codec = one subclass + one entry), ``resolve_codec`` binds a family name to
-the round's ``(p_s, p_q)`` operating point.
+the round's ``(p_s, p_q)`` operating point — per device when an adaptive
+policy (``repro.fl.policies``) is active.
+
+The normative bit-layout spec of the packed stream — field order,
+offset-binary values, delta-coded indices, and how ``len(bytes)`` ties to
+``expected_pytree_wire_bytes`` — is **docs/WIRE_FORMAT.md**.
 """
 from __future__ import annotations
 
@@ -221,7 +226,7 @@ class PackedBitstreamCodec(Codec):
 
     holds exactly.  Selection and quantization reuse ``compress_tensor``
     verbatim, making the decode bit-identical to :class:`DenseRefCodec` for
-    the same ``(p_s, p_q, rng)``."""
+    the same ``(p_s, p_q, rng)``.  Full layout spec: docs/WIRE_FORMAT.md."""
 
     p_s: float = 1.0
     p_q: int = FLOAT_BITS

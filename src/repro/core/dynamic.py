@@ -12,6 +12,11 @@ full fidelity late.  (The paper's prose is ambiguous about decay direction;
 Fig. 7/Table 5 — TEASQ faster than TEA-Fed early AND higher final accuracy
 than TEAStatic — is only consistent with decaying *toward less compression*,
 which is what we implement.)
+
+Beyond the paper: :func:`greedy_search_per_tier` runs one budgeted search
+per bandwidth tier (monotone: slower links end at least as compressed),
+feeding the ``tier_aware`` per-device codec policy in
+``repro.fl.policies``.
 """
 from __future__ import annotations
 
@@ -94,6 +99,57 @@ def greedy_search(eval_acc: Callable[[float, int], float],
                 si = si_save   # quantization step unaffordable at any p_s
                 break
     return si, qi, trace
+
+
+def greedy_search_per_tier(eval_acc: Callable[[float, int], float],
+                           theta: float,
+                           bandwidth_scales: Sequence[float],
+                           set_s: Sequence[float] = DEFAULT_SET_S,
+                           set_q: Sequence[int] = DEFAULT_SET_Q,
+                           ) -> Tuple[List[Tuple[int, int]],
+                                      List[List[Tuple[float, int, float]]]]:
+    """Per-tier extension of Algorithm 5 for heterogeneous fleets.
+
+    Tier ``i`` (link scaling ``bandwidth_scales[i]``; < 1 = slower) gets its
+    own greedy search with accuracy budget ``theta * max(1, 1/b_i)`` — a
+    link with 1/4 the bandwidth buys its 4x wire saving with a
+    proportionally larger accuracy allowance, which is the wire-cost/model-
+    quality trade TimelyFL-style heterogeneity adaptation makes per device.
+    Tiers are searched fastest-first with a monotone clamp: a slower tier is
+    never *less* compressed than a faster one, so per-transfer wire bytes
+    are non-increasing as links get slower (the property the ``tier_aware``
+    codec policy and its tests rely on).
+
+    Returns ``(points, traces)`` in input tier order, where ``points[i] =
+    (si, qi)`` indexes ``set_s`` / ``set_q``.
+
+    ``eval_acc`` is memoized per operating point across the tier searches
+    (each profile eval is a full codec roundtrip + model eval — seconds on
+    CPU — and every tier's search revisits the baseline and the shallow
+    points), so N tiers cost roughly one search's worth of *distinct*
+    evals, and all tiers judge a point by the same measured accuracy.
+    """
+    scales = [float(b) for b in bandwidth_scales]
+    memo: dict = {}
+
+    def cached_eval(p_s: float, p_q: int) -> float:
+        key = (p_s, p_q)
+        if key not in memo:
+            memo[key] = eval_acc(p_s, p_q)
+        return memo[key]
+
+    order = sorted(range(len(scales)), key=lambda i: -scales[i])
+    points: List[Tuple[int, int]] = [(0, 0)] * len(scales)
+    traces: List[List[Tuple[float, int, float]]] = [[] for _ in scales]
+    prev_s = prev_q = 0
+    for i in order:
+        tier_theta = theta * max(1.0, 1.0 / max(scales[i], 1e-9))
+        si, qi, trace = greedy_search(cached_eval, tier_theta, set_s, set_q)
+        si, qi = max(si, prev_s), max(qi, prev_q)
+        points[i] = (si, qi)
+        traces[i] = trace
+        prev_s, prev_q = si, qi
+    return points, traces
 
 
 def make_schedule(si: int, qi: int, total_rounds: int,

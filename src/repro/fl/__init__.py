@@ -3,6 +3,8 @@ from repro.core.codecs import (CODECS, Codec, DenseRefCodec, IdentityCodec,
                                resolve_codec)
 from repro.fl.engine import (ChannelMeter, CohortTrainer, DeviceRegistry,
                              FLEngine, SerialTrainer)
+from repro.fl.policies import (POLICIES, CodecPolicy, DispatchContext,
+                               make_policy)
 from repro.fl.protocols import (METHODS, STRATEGIES, ProtocolStrategy,
                                 best_acc_within, make_setup, make_sim,
                                 make_strategy, profile_compression,
@@ -17,6 +19,8 @@ __all__ = [
     "PackedBitstreamCodec", "ThresholdGraphCodec", "resolve_codec",
     "ChannelMeter", "CohortTrainer", "DeviceRegistry", "FLEngine",
     "SerialTrainer",
+    # per-device adaptive codec policies (SimConfig.codec_policy)
+    "POLICIES", "CodecPolicy", "DispatchContext", "make_policy",
     "METHODS", "STRATEGIES", "ProtocolStrategy", "best_acc_within",
     "make_setup", "make_sim", "make_strategy", "profile_compression",
     "run_method", "time_to_acc",

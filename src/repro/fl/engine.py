@@ -18,8 +18,11 @@ Mapping to the paper (TEASQ-Fed, Algs. 1-2):
   model internals beyond the task object.
 * **Algs. 3-4 (wire compression)** — the codec layer
   (``repro.core.codecs``): every dispatch asks the bound strategy for a
-  :class:`~repro.core.codecs.Codec` via ``channel_for(t, device_id=k)``
-  (base policy device-blind; overrides can compress per device); the serial path
+  :class:`~repro.core.codecs.Codec` via ``channel_for(t, device_id=k)``,
+  which routes the protocol's global (p_s, p_q) point through the bound
+  :class:`~repro.fl.policies.CodecPolicy` (``SimConfig.codec_policy`` —
+  ``static`` is device-blind, ``tier_aware``/``staleness_aware`` compress
+  per device, with per-tier byte totals in ``ChannelMeter``); the serial path
   runs ``codec.roundtrip`` (the faithful reference codec by default, the
   real bit-packed stream with ``SimConfig.codec="packed"``) while the
   cohort path fuses ``ThresholdGraphCodec.apply_tree`` into its jitted scan
@@ -55,7 +58,8 @@ from repro.core.codecs import Codec, IdentityCodec, ThresholdGraphCodec
 from repro.core.latency import (comm_latency, device_rates,
                                 sample_compute_latency)
 from repro.core.server import ServerConfig, TeasqServer
-from repro.fl.simulator import LogEntry, ScenarioConfig, SimConfig
+from repro.fl.simulator import (LogEntry, ScenarioConfig, SimConfig,
+                                tier_assignment)
 from repro.fl.tasks import get_task
 
 
@@ -77,18 +81,15 @@ class DeviceRegistry:
         self.tier = np.zeros(n, np.int64)
 
     def apply_tiers(self, tiers) -> None:
-        """Contiguous deterministic tier assignment by device index."""
-        n = len(self.alive)
-        start = 0
+        """Scale latency per tier under the shared contiguous assignment
+        (``repro.fl.simulator.tier_assignment`` — the same map the codec
+        policies use, so latency and codec choice agree per device)."""
+        self.tier = tier_assignment(len(self.alive), tiers)
         for i, t in enumerate(tiers):
-            stop = n if i == len(tiers) - 1 else min(
-                n, start + int(round(t.fraction * n)))
-            sl = slice(start, stop)
-            self.tier[sl] = i
-            self.a_k[sl] *= t.compute_scale
-            self.down_rates[sl] *= t.bandwidth_scale
-            self.up_rates[sl] *= t.bandwidth_scale
-            start = stop
+            sel = self.tier == i
+            self.a_k[sel] *= t.compute_scale
+            self.down_rates[sel] *= t.bandwidth_scale
+            self.up_rates[sel] *= t.bandwidth_scale
 
     def round_latency(self, k: int, bits_down: float, bits_up: float,
                       n_batches: int, rng: np.random.RandomState
@@ -108,30 +109,42 @@ class ChannelMeter:
     Transfers are priced by the wire codec (``codec.wire_bytes`` — shape-only
     and value-independent for every registered codec) via the ``*_tree``
     helpers; the scalar ``down``/``up`` record an already-priced transfer
-    (e.g. the serial path, which meters the actual encoded size)."""
+    (e.g. the serial path, which meters the actual encoded size).  When the
+    caller knows the target device's heterogeneity tier it passes ``tier=``
+    and the meter additionally keeps per-tier totals (``tier_up`` /
+    ``tier_down``) — the accounting behind the tier-aware codec-policy
+    acceptance numbers in results/engine_scale.json."""
 
     def __init__(self):
         self.bytes_up = 0
         self.bytes_down = 0
         self.max_up = 0
         self.max_down = 0
+        self.tier_up: Dict[int, int] = {}
+        self.tier_down: Dict[int, int] = {}
 
-    def down(self, nbytes: int) -> None:
+    def down(self, nbytes: int, tier: Optional[int] = None) -> None:
         self.bytes_down += nbytes
         self.max_down = max(self.max_down, nbytes)
+        if tier is not None:
+            self.tier_down[tier] = self.tier_down.get(tier, 0) + nbytes
 
-    def up(self, nbytes: int) -> None:
+    def up(self, nbytes: int, tier: Optional[int] = None) -> None:
         self.bytes_up += nbytes
         self.max_up = max(self.max_up, nbytes)
+        if tier is not None:
+            self.tier_up[tier] = self.tier_up.get(tier, 0) + nbytes
 
-    def down_tree(self, codec: Codec, tree: Any) -> int:
+    def down_tree(self, codec: Codec, tree: Any,
+                  tier: Optional[int] = None) -> int:
         nbytes = codec.wire_bytes(tree)
-        self.down(nbytes)
+        self.down(nbytes, tier)
         return nbytes
 
-    def up_tree(self, codec: Codec, tree: Any) -> int:
+    def up_tree(self, codec: Codec, tree: Any,
+                tier: Optional[int] = None) -> int:
         nbytes = codec.wire_bytes(tree)
-        self.up(nbytes)
+        self.up(nbytes, tier)
         return nbytes
 
 
@@ -480,13 +493,14 @@ class FLEngine:
         self.stats.dispatches += 1
         w_t, t0 = grant
         codec = self.strategy.channel_for(t0, device_id=k)
+        tier = int(self.devices.tier[k])
 
         if self.scenario is not None and self.scenario.active:
             scen = self.scenario
             u = self.scenario_rng.random_sample()
             if u < scen.dropout_prob + scen.failure_prob:
                 mode = "dropout" if u < scen.dropout_prob else "transient"
-                nbytes_down = self.channel.down_tree(codec, w_t)
+                nbytes_down = self.channel.down_tree(codec, w_t, tier)
                 n_k = len(self.partitions[k])
                 n_batches = max(1, n_k // cfg.batch_size)
                 dl, cp, _ = self.devices.round_latency(
@@ -496,10 +510,10 @@ class FLEngine:
                 return
 
         if self.trainer.deferred:
-            nbytes_down = self.channel.down_tree(codec, w_t)
+            nbytes_down = self.channel.down_tree(codec, w_t, tier)
             task = self.trainer.submit(k, w_t, t0, codec.p_s, codec.p_q)
             # same tree shapes and (p_s, p_q) => nbytes_up == nbytes_down
-            nbytes_up = self.channel.up_tree(codec, w_t)
+            nbytes_up = self.channel.up_tree(codec, w_t, tier)
             n_batches = max(1, task.n_k // cfg.batch_size)
             dl, cp, ul = self.devices.round_latency(
                 k, nbytes_down * 8, nbytes_up * 8, n_batches, self.rng)
@@ -507,10 +521,10 @@ class FLEngine:
             return
 
         w_recv, nbytes_down = codec.roundtrip(w_t, rng=self.rng)
-        self.channel.down(nbytes_down)
+        self.channel.down(nbytes_down, tier)
         w_local, n_k = self.strategy.local_train(self, k, w_recv)
         w_up, nbytes_up = codec.roundtrip(w_local, rng=self.rng)
-        self.channel.up(nbytes_up)
+        self.channel.up(nbytes_up, tier)
         n_batches = max(1, n_k // cfg.batch_size)
         dl, cp, ul = self.devices.round_latency(
             k, nbytes_down * 8, nbytes_up * 8, n_batches, self.rng)
@@ -532,6 +546,9 @@ class FLEngine:
 
     def _handle_arrival(self, now, k, payload, h, eval_every, push,
                         waiting) -> None:
+        # feed the codec policy's per-device staleness estimator (no-op for
+        # the static policy; draws no RNG, so parity runs are untouched)
+        self.strategy.policy.observe_arrival(k, max(0, self.server.t - h))
         done_round = self.strategy.on_arrival(self, now, k, payload, h)
         self.stats.completions += 1
         self.stats.completed_per_device[k] += 1
@@ -553,10 +570,12 @@ class FLEngine:
             sel = self.rng.choice(cfg.n_devices, per_round, replace=False)
             updates, weights, latencies = [], [], []
             for k in sel:
-                nbytes = self.channel.down_tree(identity, self.server.w)
+                tier = int(self.devices.tier[k])
+                nbytes = self.channel.down_tree(identity, self.server.w,
+                                                tier)
                 w_local, n_k = self.strategy.local_train(self, k,
                                                          self.server.w)
-                self.channel.up(nbytes)
+                self.channel.up(nbytes, tier)
                 n_batches = max(1, n_k // cfg.batch_size)
                 dl, cp, ul = self.devices.round_latency(
                     k, nbytes * 8, nbytes * 8, n_batches, self.rng)

@@ -1,0 +1,213 @@
+"""Adaptive per-device codec policies: who gets which wire format.
+
+The paper's Alg. 5 picks ONE global ``(p_s, p_q)`` operating point for the
+whole fleet.  On a heterogeneous fleet that is the wrong trade everywhere at
+once: fast links pay accuracy for compression they do not need, while slow
+links stall on bytes they cannot afford (TimelyFL, arXiv:2304.06947, makes
+the per-device-adaptation case; SEAFL, arXiv:2503.05755, the
+staleness-adaptive one).  A :class:`CodecPolicy` closes that gap — it maps
+the *dispatch context* (round ``t``, device id, the device's
+bandwidth/compute tier from ``ScenarioConfig.tiers``, and a per-device
+staleness estimate fed by both simulator backends) to a concrete
+:class:`~repro.core.codecs.Codec` at a per-device ``(p_s, p_q)`` operating
+point.
+
+Wiring: ``SimConfig.codec_policy`` selects a policy from :data:`POLICIES`;
+``ProtocolStrategy.__init__`` binds it and ``channel_for(t, device_id)``
+routes every dispatch through :meth:`CodecPolicy.codec_for`, so both
+``FLEngine`` and the legacy ``FLSimulator`` meter exact per-device wire
+bytes through whatever codec the policy picked.  Registered policies:
+
+* ``static`` — the protocol's own global operating point, untouched.  This
+  is the default and is byte-identical to the pre-policy behavior (pinned
+  by tests/test_policies.py against tests/data/pinned_histories.json).
+* ``tier_aware`` — per-bandwidth-tier operating points: explicit
+  ``SimConfig.tier_points`` (e.g. from the per-tier Alg. 5 search
+  ``profile_compression(..., tiers=...)``), or, when unset, derived by
+  stepping the base point ``round(log2(1 / bandwidth_scale))`` notches
+  toward more compression along the Alg. 5 candidate sets — so a tier with
+  1/8 the bandwidth ships ~3 notches more aggressively packed updates while
+  full-rate tiers stay at the protocol's near-dense point.
+* ``staleness_aware`` — the server down-weights stale uploads
+  (Eq. 9), so wire bits spent on chronically stale devices buy little
+  aggregation mass; devices whose EWMA staleness crosses successive
+  ``stale_per_notch`` thresholds get extra compression notches.
+
+Policies only adapt *compressing* dispatches: a protocol whose base point is
+uncompressed (TEA-Fed, FedAvg, FedAsync) keeps dense f32 wire semantics
+under every policy.  A new policy is one subclass + one :data:`POLICIES`
+entry.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import ClassVar, Dict, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+from repro.core.codecs import Codec, resolve_codec
+from repro.core.compression import FLOAT_BITS
+from repro.core.dynamic import DEFAULT_SET_Q, DEFAULT_SET_S
+from repro.fl.simulator import SimConfig, tier_assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchContext:
+    """Everything a policy may condition on for one round-``t`` dispatch."""
+    t: int
+    device_id: Optional[int]
+    tier: int                  # index into ScenarioConfig.tiers (0 if none)
+    bandwidth_scale: float     # the tier's link scaling (<1 = slower)
+    compute_scale: float       # the tier's compute scaling (>1 = slower)
+    staleness: float           # EWMA of the device's observed staleness
+
+
+def _nearest_idx(candidates: Sequence, x) -> int:
+    return min(range(len(candidates)), key=lambda i: abs(candidates[i] - x))
+
+
+def notch_point(p_s: float, p_q: int, notches: int,
+                set_s: Sequence[float] = DEFAULT_SET_S,
+                set_q: Sequence[int] = DEFAULT_SET_Q) -> Tuple[float, int]:
+    """Step an operating point ``notches`` steps toward more compression
+    along the Alg. 5 candidate sets (clamped at the most compressed entry).
+    ``notches=0`` snaps to the nearest candidate pair without moving."""
+    si = min(_nearest_idx(set_s, p_s) + notches, len(set_s) - 1)
+    qi = min(_nearest_idx(set_q, p_q) + notches, len(set_q) - 1)
+    return set_s[si], set_q[qi]
+
+
+class CodecPolicy(abc.ABC):
+    """Maps a dispatch context to a codec + ``(p_s, p_q)`` operating point.
+
+    Hooks:
+
+    * :meth:`codec_for` — the strategy-facing entry point; adapts only
+      compressing dispatches and binds the (possibly per-device) point to
+      the configured ``SimConfig.codec`` family.
+    * :meth:`operating_point` — the policy decision itself; override this.
+    * :meth:`observe_arrival` — both backends call this when an upload
+      lands, with the arrival's staleness in aggregation rounds; the base
+      class keeps a per-device EWMA for staleness-aware policies.  Draws no
+      RNG, so inactive policies leave event streams bit-identical.
+    """
+
+    name: ClassVar[str] = ""
+    staleness_beta: ClassVar[float] = 0.5     # EWMA update weight
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        tiers = cfg.scenario.tiers if cfg.scenario is not None else None
+        self.tiers = list(tiers) if tiers else []
+        self.tier_of = tier_assignment(cfg.n_devices, tiers)
+        self.bandwidth_scale = np.asarray(
+            [t.bandwidth_scale for t in self.tiers] or [1.0])
+        self.compute_scale = np.asarray(
+            [t.compute_scale for t in self.tiers] or [1.0])
+        self.staleness_est = np.zeros(cfg.n_devices)
+
+    def _known(self, device_id: Optional[int]) -> bool:
+        # device ids beyond cfg.n_devices (a strategy reused across fleets)
+        # fall back to tier-0 / fresh rather than indexing out of range
+        return device_id is not None and 0 <= device_id < len(self.tier_of)
+
+    def observe_arrival(self, device_id: int, staleness: float) -> None:
+        if not self._known(device_id):
+            return
+        b = self.staleness_beta
+        self.staleness_est[device_id] = (
+            (1.0 - b) * self.staleness_est[device_id] + b * staleness)
+
+    def context(self, t: int, device_id: Optional[int]) -> DispatchContext:
+        known = self._known(device_id)
+        tier = int(self.tier_of[device_id]) if known else 0
+        stale = float(self.staleness_est[device_id]) if known else 0.0
+        return DispatchContext(t, device_id, tier,
+                               float(self.bandwidth_scale[tier]),
+                               float(self.compute_scale[tier]), stale)
+
+    @abc.abstractmethod
+    def operating_point(self, ctx: DispatchContext, p_s: float,
+                        p_q: int) -> Tuple[float, int]:
+        """The adapted ``(p_s, p_q)`` for this dispatch, given the
+        protocol's base point."""
+
+    def codec_for(self, t: int, device_id: Optional[int], p_s: float,
+                  p_q: int) -> Codec:
+        if p_s < 1.0 or p_q < FLOAT_BITS:   # only adapt compressing rounds
+            p_s, p_q = self.operating_point(self.context(t, device_id),
+                                            p_s, p_q)
+        return resolve_codec(self.cfg.codec, p_s, p_q,
+                             iters=self.cfg.cohort_channel_iters)
+
+
+class StaticPolicy(CodecPolicy):
+    """The protocol's own global Alg. 5 point for every device — the
+    default, byte-identical to the pre-policy codec resolution."""
+
+    name = "static"
+
+    def observe_arrival(self, device_id, staleness) -> None:
+        pass                                  # keeps the hot path trivial
+
+    def operating_point(self, ctx, p_s, p_q):
+        return p_s, p_q
+
+    def codec_for(self, t, device_id, p_s, p_q) -> Codec:
+        return resolve_codec(self.cfg.codec, p_s, p_q,
+                             iters=self.cfg.cohort_channel_iters)
+
+
+class TierAwarePolicy(CodecPolicy):
+    """Bandwidth-tier-aware compression (the TimelyFL-style heterogeneity
+    adaptation): each tier gets its own operating point.  Explicit
+    ``SimConfig.tier_points`` (index i = ``scenario.tiers[i]``) win — feed
+    them from the per-tier Alg. 5 search, ``profile_compression(...,
+    tiers=cfg.scenario.tiers)``.  Without them, the point is derived by
+    stepping the protocol's base point ``round(log2(1 / bandwidth_scale))``
+    notches toward more compression, so a fleet with no tiers (or an
+    all-full-rate one) is indistinguishable from ``static``."""
+
+    name = "tier_aware"
+
+    def operating_point(self, ctx, p_s, p_q):
+        points = self.cfg.tier_points
+        if points:
+            p_s, p_q = points[min(ctx.tier, len(points) - 1)]
+            return float(p_s), int(p_q)
+        b = max(ctx.bandwidth_scale, 1e-9)
+        notches = max(0, int(round(np.log2(1.0 / b))))
+        return notch_point(p_s, p_q, notches) if notches else (p_s, p_q)
+
+
+class StalenessAwarePolicy(CodecPolicy):
+    """Staleness-adaptive compression (the SEAFL-style treatment of slow
+    uploads): Eq. 9 down-weights an update by its staleness, so the wire
+    bits of a chronically stale device buy less aggregation mass than the
+    same bits from a fresh one.  Devices whose EWMA staleness crosses
+    successive ``stale_per_notch`` thresholds ship ``1..max_notches`` extra
+    compression notches; fresh devices keep the protocol's base point."""
+
+    name = "staleness_aware"
+    stale_per_notch: ClassVar[float] = 2.0   # EWMA rounds per extra notch
+    max_notches: ClassVar[int] = 2
+
+    def operating_point(self, ctx, p_s, p_q):
+        notches = min(self.max_notches,
+                      int(ctx.staleness // self.stale_per_notch))
+        return notch_point(p_s, p_q, notches) if notches else (p_s, p_q)
+
+
+POLICIES: Dict[str, Type[CodecPolicy]] = {
+    cls.name: cls for cls in (StaticPolicy, TierAwarePolicy,
+                              StalenessAwarePolicy)
+}
+
+
+def make_policy(name: str, cfg: SimConfig) -> CodecPolicy:
+    try:
+        return POLICIES[name](cfg)
+    except KeyError:
+        raise ValueError(f"unknown codec policy {name!r}; "
+                         f"expected one of {sorted(POLICIES)}") from None

@@ -20,9 +20,11 @@ import jax
 import numpy as np
 
 from repro.core.codecs import Codec, resolve_codec
-from repro.core.dynamic import greedy_search
+from repro.core.dynamic import (DEFAULT_SET_Q, DEFAULT_SET_S, greedy_search,
+                                greedy_search_per_tier)
 from repro.core.staleness import staleness_weight
 from repro.data.synthetic import partition_iid, partition_noniid_classes
+from repro.fl.policies import make_policy
 from repro.fl.simulator import (FLSimulator, LogEntry, SimConfig,
                                 moon_local_train)
 from repro.fl.tasks import get_task
@@ -40,12 +42,15 @@ class ProtocolStrategy(abc.ABC):
     * ``channel_for(t, device_id=None)`` — the wire
       :class:`~repro.core.codecs.Codec` for a task dispatched at round t to
       device ``device_id`` (both directions); engines meter bytes via
-      ``codec.wire_bytes`` and apply loss via ``codec.roundtrip``.  The base
-      policy is device-blind; overrides can vary the codec per device
-      (bandwidth-tier- or staleness-aware compression).
-    * ``compression_at(t)`` — the (p_s, p_q) *policy* behind it (Alg. 5
-      schedule or static point); protocols override this one-liner and the
-      base ``channel_for`` binds it to the ``SimConfig.codec`` family.
+      ``codec.wire_bytes`` and apply loss via ``codec.roundtrip``.  The
+      protocol's global (p_s, p_q) point is routed through the bound
+      :class:`~repro.fl.policies.CodecPolicy` (``SimConfig.codec_policy``):
+      ``static`` keeps it as-is for every device, ``tier_aware`` /
+      ``staleness_aware`` adapt it per device.
+    * ``compression_at(t)`` — the protocol's *global* (p_s, p_q) operating
+      point (Alg. 5 schedule or static point); protocols override this
+      one-liner and ``channel_for`` hands it to the policy, which binds the
+      final point to the ``SimConfig.codec`` family.
     * ``local_train(engine, k, w)`` — device-side update; defaults to the
       engine's trainer (serial prox-SGD or vectorized cohort).
     * ``on_arrival(engine, now, k, payload, h)`` — server-side handling of a
@@ -59,19 +64,21 @@ class ProtocolStrategy(abc.ABC):
 
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        self.policy = make_policy(cfg.codec_policy, cfg)
 
     def compression_at(self, t: int) -> Tuple[float, int]:
         return 1.0, 32
 
     def channel_for(self, t: int, device_id: Optional[int] = None) -> Codec:
         """Codec for a round-``t`` dispatch to ``device_id``: the strategy's
-        (p_s, p_q) policy bound to the configured codec family
-        (``SimConfig.codec``).  The base policy ignores ``device_id``
-        (defaults to None for backward compatibility); per-device adaptive
-        strategies override this hook."""
+        global (p_s, p_q) point, adapted per device by the bound
+        :class:`~repro.fl.policies.CodecPolicy` and bound to the configured
+        codec family (``SimConfig.codec``).  ``device_id`` defaults to None
+        for backward compatibility (one-arg callers get the tier-0 /
+        fresh-device point); strategy subclasses may still override this
+        hook directly for bespoke per-device behavior."""
         p_s, p_q = self.compression_at(t)
-        return resolve_codec(self.cfg.codec, p_s, p_q,
-                             iters=self.cfg.cohort_channel_iters)
+        return self.policy.codec_for(t, device_id, p_s, p_q)
 
     def local_train(self, engine, k: int, w: Any) -> Tuple[Any, int]:
         return engine.trainer.train(k, w)
@@ -264,10 +271,19 @@ def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,
 
 def profile_compression(w: Any, data: Dict[str, np.ndarray], theta: float = 0.02,
                         seed: int = 0, codec: str = "dense",
-                        task: str = "fmnist_cnn"):
+                        task: str = "fmnist_cnn", tiers=None):
     """Algorithm 5 search on a profiling model ``w``, through the codec
     seam (stochastic QSGD rounding, as the wire applies).  Model-agnostic:
-    the accuracy oracle is the task's ``eval_metric``."""
+    the accuracy oracle is the task's ``eval_metric``.
+
+    With ``tiers=None`` (the paper's global search) returns
+    ``(si, qi, trace)`` — the chosen static point's indices into the
+    default candidate sets.  With ``tiers`` — a ``ScenarioConfig.tiers``
+    list (or bare bandwidth scales) — runs the per-tier extension
+    (:func:`repro.core.dynamic.greedy_search_per_tier`) and returns
+    ``(tier_points, traces)`` where ``tier_points[i]`` is tier i's searched
+    ``(p_s, p_q)``, directly usable as ``SimConfig.tier_points`` for the
+    ``tier_aware`` codec policy."""
     xs = data["x_test"][:2000]
     ys = data["y_test"][:2000]
     eval_jit = jax.jit(get_task(task).eval_metric)
@@ -277,7 +293,12 @@ def profile_compression(w: Any, data: Dict[str, np.ndarray], theta: float = 0.02
         w2, _ = resolve_codec(codec, p_s, p_q).roundtrip(w, rng=rng)
         return float(eval_jit(w2, xs, ys))
 
-    return greedy_search(eval_acc, theta)
+    if tiers is None:
+        return greedy_search(eval_acc, theta)
+    scales = [getattr(t, "bandwidth_scale", t) for t in tiers]
+    points, traces = greedy_search_per_tier(eval_acc, theta, scales)
+    return ([(DEFAULT_SET_S[si], DEFAULT_SET_Q[qi]) for si, qi in points],
+            traces)
 
 
 def run_method(method: str, data, parts, w0, *, iid: bool = True,

@@ -22,8 +22,7 @@ import numpy as np
 from repro.core.client import local_update
 from repro.core.codecs import IdentityCodec
 from repro.core.dynamic import CompressionSchedule
-from repro.core.latency import (ComputeConfig, WirelessConfig, comm_latency,
-                                device_rates, sample_compute_latency)
+from repro.core.latency import ComputeConfig, WirelessConfig
 from repro.core.server import ServerConfig, TeasqServer
 from repro.core.staleness import staleness_weight
 from repro.fl.tasks import get_task
@@ -91,26 +90,54 @@ def moon_local_train(w_glob: Any, prev: Any, x, y, *, epochs: int,
 class TierSpec:
     """One heterogeneity tier: a fraction of the fleet with scaled compute
     speed (multiplies the shifted-exponential coefficient a_k; >1 = slower)
-    and scaled link bandwidth (multiplies both directions' rates)."""
+    and scaled link bandwidth (multiplies both directions' rates;
+    <1 = slower links)."""
     fraction: float
     compute_scale: float = 1.0
     bandwidth_scale: float = 1.0
     name: str = ""
 
 
+def tier_assignment(n_devices: int,
+                    tiers: Optional[List[TierSpec]]) -> np.ndarray:
+    """Contiguous deterministic tier indices by device id: tier ``i`` covers
+    the next ``round(fraction_i * n)`` devices and the last tier absorbs the
+    remainder.  Shared by ``DeviceRegistry.apply_tiers`` (latency scaling)
+    and the codec policies (``repro.fl.policies``), so the latency model and
+    per-device codec choice always agree on who sits in which tier."""
+    tier = np.zeros(n_devices, np.int64)
+    if not tiers:
+        return tier
+    start = 0
+    for i, t in enumerate(tiers):
+        stop = n_devices if i == len(tiers) - 1 else min(
+            n_devices, start + int(round(t.fraction * n_devices)))
+        tier[start:stop] = i
+        start = stop
+    return tier
+
+
 @dataclasses.dataclass
 class ScenarioConfig:
-    """Scenario-injection knobs, consumed by ``repro.fl.engine.FLEngine``
-    (the legacy ``FLSimulator`` ignores them).  All randomness is drawn from
-    a dedicated scenario RNG so that an all-zero ScenarioConfig leaves the
-    engine's event stream bit-identical to the no-scenario run.
+    """Scenario-injection knobs.  ``FLEngine`` consumes all of them; the
+    legacy ``FLSimulator`` applies only ``tiers`` (latency scaling + the
+    tier-aware codec policies) and ignores the failure knobs.  All
+    randomness is drawn from a dedicated scenario RNG so that an all-zero
+    ScenarioConfig leaves the engine's event stream bit-identical to the
+    no-scenario run.
 
     * ``dropout_prob``: per-task probability the device leaves the fleet
       mid-round (permanent); its slot is freed and re-dispatched.
+      Engine-only.
     * ``failure_prob``: per-task probability of a transient mid-round crash;
       the device retries after ``retry_backoff`` simulated seconds.
-    * ``tiers``: heterogeneous compute/bandwidth tiers assigned contiguously
-      by device index according to each tier's ``fraction``.
+      Engine-only.
+    * ``retry_backoff``: simulated seconds before a transiently-failed
+      device re-requests work.
+    * ``tiers``: heterogeneous compute/bandwidth ``TierSpec`` tiers assigned
+      contiguously by device index according to each tier's ``fraction``
+      (see ``tier_assignment``); also the tier structure the ``tier_aware``
+      codec policy adapts to.
     """
     dropout_prob: float = 0.0
     failure_prob: float = 0.0
@@ -125,14 +152,82 @@ class ScenarioConfig:
 
 @dataclasses.dataclass
 class SimConfig:
-    # teasq | teastatic | teas | teaq | tea | fedavg | fedasync
-    # SOTA baselines (§5.2.5): moon (sync, model-contrastive),
-    # port (async, unbounded concurrency + capped poly staleness weight),
-    # asofed (async, staleness-adaptive local lr)
+    """One config object for both simulator backends — every knob, in one
+    place (the README's configuration table is generated from this list):
+
+    **Protocol & model**
+
+    * ``method`` — protocol name from ``repro.fl.protocols.STRATEGIES``:
+      the TEA-Fed family (``tea`` uncompressed, ``teas`` sparsify-only,
+      ``teaq`` quantize-only, ``teastatic`` both static, ``teasq`` the full
+      Alg. 5 schedule), async baselines (``fedasync``, ``port``,
+      ``asofed``), and synchronous baselines (``fedavg``, ``moon``).
+    * ``task`` — model family under training, from ``repro.fl.tasks.TASKS``
+      (``fmnist_cnn`` = the paper's §5.1 CNN; ``transformer_lm``,
+      ``fmnist_mlp`` — any registered FLTask trains under any protocol).
+    * ``n_devices`` — fleet size N.
+
+    **Server (Algs. 1-2)**
+
+    * ``c_fraction`` — admission gate: at most ``ceil(N * C)`` devices train
+      concurrently (Alg. 1).
+    * ``gamma`` — aggregation cache fraction: a round completes after
+      ``ceil(N * gamma)`` uploads (Alg. 2, Eq. 6).
+    * ``alpha`` — server mixing rate of the cached aggregate (Eq. 10); also
+      the async baselines' base mixing weight.
+    * ``a`` — staleness-decay exponent (Eq. 9).
+    * ``max_staleness`` — FedAsync staleness cap in its poly decay.
+
+    **Device-side local training (Alg. 1, Eq. 5)**
+
+    * ``mu`` — proximal term weight; ``epochs``/``batch_size``/``lr`` — the
+      local prox-SGD loop.
+    * ``devices_per_round`` — synchronous (FedAvg/MOON) cohort size.
+
+    **Wire compression (Algs. 3-5)**
+
+    * ``p_s`` — kept fraction under Top-K sparsification (1.0 = keep all).
+    * ``p_q`` — quantization bit width (32 = no quantization).
+    * ``schedule`` — optional Alg. 5 decay ``CompressionSchedule``;
+      overrides the static point for ``teasq``.
+    * ``codec`` — wire codec family (``repro.core.codecs.CODECS``):
+      ``dense`` = the Algs. 3-4 reference codec, ``packed`` = the real
+      bit-packed stream (docs/WIRE_FORMAT.md), ``threshold`` = the in-graph
+      approximate channel, ``identity`` = compression off.  The
+      uncompressed (p_s>=1, p_q>=32) point short-circuits to identity for
+      every family.
+    * ``codec_policy`` — per-device codec policy
+      (``repro.fl.policies.POLICIES``): ``static`` (default — the
+      protocol's own global operating point, byte-identical to the
+      pre-policy behavior), ``tier_aware`` (slower-bandwidth tiers get more
+      aggressive points, from ``tier_points`` or log2-derived notches), or
+      ``staleness_aware`` (chronically stale devices get extra compression
+      notches).
+    * ``tier_points`` — optional explicit per-tier ``(p_s, p_q)`` list for
+      the ``tier_aware`` policy, e.g. the output of the per-tier Alg. 5
+      search ``profile_compression(..., tiers=...)``; index i maps to
+      ``scenario.tiers[i]``.
+
+    **Latency model (§3.1)**
+
+    * ``wireless`` — cell geometry/power (``WirelessConfig``).
+    * ``compute`` — shifted-exponential compute latency (``ComputeConfig``).
+
+    **Infrastructure**
+
+    * ``seed`` — the single RNG seed behind data, latency draws, and
+      protocol randomness (fixed seed = bit-reproducible history).
+    * ``cohort_size`` — engine-only: > 0 switches ``FLEngine`` to the
+      vectorized cohort trainer (deferred training, one jitted call per
+      padded cohort); the legacy ``FLSimulator`` ignores it.
+    * ``cohort_channel_iters`` — threshold binary-search iterations of the
+      in-graph channel the cohort path fuses.
+    * ``scenario`` — ``ScenarioConfig`` injection (dropout / transient
+      failure / heterogeneity tiers); see its docstring for which backend
+      consumes what.
+    """
+
     method: str = "teasq"
-    # model family under training, resolved from repro.fl.tasks.TASKS
-    # ("fmnist_cnn" = the paper's §5.1 CNN; "transformer_lm", "fmnist_mlp",
-    # ... — any registered FLTask trains under any protocol)
     task: str = "fmnist_cnn"
     n_devices: int = 100
     c_fraction: float = 0.1
@@ -147,12 +242,10 @@ class SimConfig:
     p_s: float = 1.0
     p_q: int = 32
     schedule: Optional[CompressionSchedule] = None
-    # wire codec family (repro.core.codecs.CODECS): "dense" = the Algs. 3-4
-    # reference codec, "packed" = the real bit-packed stream, "threshold" =
-    # the in-graph approximate channel, "identity" = compression off.  The
-    # uncompressed (p_s>=1, p_q>=32) point short-circuits to identity for
-    # every family.
     codec: str = "dense"
+    # per-device adaptive codec policy (repro.fl.policies.POLICIES)
+    codec_policy: str = "static"
+    tier_points: Optional[List[Tuple[float, int]]] = None
     # latency model
     wireless: WirelessConfig = dataclasses.field(default_factory=WirelessConfig)
     compute: ComputeConfig = dataclasses.field(default_factory=ComputeConfig)
@@ -160,10 +253,7 @@ class SimConfig:
     devices_per_round: int = 10
     max_staleness: int = 4
     seed: int = 0
-    # engine-only knobs (ignored by the legacy FLSimulator):
-    # cohort_size > 0 switches FLEngine to the vectorized cohort trainer
-    # (deferred training, one jitted call per padded cohort); scenario
-    # injects dropout / mid-round failure / heterogeneity tiers.
+    # engine-only knobs; see class docstring
     cohort_size: int = 0
     cohort_channel_iters: int = 12   # threshold binary-search iterations
     scenario: Optional[ScenarioConfig] = None
@@ -189,9 +279,14 @@ class FLSimulator:
         self.rng = np.random.RandomState(cfg.seed)
         n = cfg.n_devices
         assert len(partitions) == n
-        self.down_rates, self.up_rates = device_rates(n, cfg.wireless, self.rng)
-        self.a_k = self.rng.uniform(cfg.compute.a_min, cfg.compute.a_max, n)
-        self.phi_k = np.full(n, cfg.compute.phi)
+        # the engine's DeviceRegistry draws rates then a_k in exactly this
+        # simulator's historical order, so sharing it keeps bit-parity while
+        # giving the legacy backend the same tier scaling (lazy import:
+        # engine imports us)
+        from repro.fl.engine import DeviceRegistry
+        self.devices = DeviceRegistry(cfg, self.rng)
+        if cfg.scenario is not None and cfg.scenario.tiers:
+            self.devices.apply_tiers(cfg.scenario.tiers)
         self.server = TeasqServer(w_init, ServerConfig(
             n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
         self.bytes_up = 0
@@ -233,13 +328,8 @@ class FLSimulator:
 
     def _round_latency(self, k: int, bits_down: float, bits_up: float,
                        n_batches: int) -> Tuple[float, float, float]:
-        dl = comm_latency(bits_down, self.down_rates[k])
-        ul = comm_latency(bits_up, self.up_rates[k])
-        cp = sample_compute_latency(self.a_k[k], self.phi_k[k],
-                                    tau_b=n_batches * self.cfg.epochs
-                                    * 0.002 * self.cfg.batch_size,
-                                    rng=self.rng)
-        return dl, cp, ul
+        return self.devices.round_latency(k, bits_down, bits_up, n_batches,
+                                          self.rng)
 
     def evaluate(self) -> float:
         xs, ys = self.data["x_test"], self.data["y_test"]
@@ -316,6 +406,10 @@ class FLSimulator:
                 push(now + dl + cp + ul, "arrival", k, (w_up, n_k), t0)
             else:  # arrival
                 w_local, n_k = payload
+                # feed the codec policy's per-device staleness estimator
+                # (no-op for the static policy; draws no RNG)
+                self.strategy.policy.observe_arrival(
+                    k, max(0, self.server.t - h))
                 if fedasync:
                     self.server.active = max(0, self.server.active - 1)
                     a_t = self._async_alpha(self.server.t - h)

@@ -20,6 +20,10 @@ jit dispatch + host<->device transfers cost ~4 ms each on CPU, which would
 dominate the serial simulator's per-round encode — and materialize bytes
 with ``np.packbits`` / ``np.unpackbits``.  tests/test_compression_invariants
 pins host-path == kernel-path bit equality.
+
+The normative stream layout these kernels serialize (field order,
+offset-binary values, delta-coded indices, bit-level tensor concatenation)
+is specified in **docs/WIRE_FORMAT.md**.
 """
 from __future__ import annotations
 

@@ -1,0 +1,127 @@
+"""The documentation front door stays true.
+
+Parses every fenced code block in README.md and docs/*.md, extracts the
+shell commands, and verifies that each referenced entry point is a real
+file and each ``--flag`` a command passes actually appears in that entry
+point's argparse source.  One subprocess smoke additionally proves the
+end-to-end example's ``--help`` parses.  Runs as part of scripts/tier1.sh
+(step 3), so a doc command cannot silently rot when code moves.
+"""
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+# commands whose first token we know how to resolve; everything else in a
+# fenced block (output samples, pseudo-layouts) is ignored
+RUNNABLE = ("python", "python3", "pip", "scripts/", "bash")
+
+
+def _doc_files():
+    docs = [os.path.join(REPO, "README.md")]
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        docs += [os.path.join(docs_dir, f) for f in sorted(os.listdir(docs_dir))
+                 if f.endswith(".md")]
+    return docs
+
+
+def iter_doc_commands():
+    """Yield (doc, line) for every runnable command in a fenced block."""
+    for doc in _doc_files():
+        with open(doc) as f:
+            text = f.read()
+        for block in FENCE_RE.findall(text):
+            for line in block.splitlines():
+                line = line.strip()
+                # drop env-var prefixes (PYTHONPATH=src python -m ...)
+                stripped = line
+                while re.match(r"^[A-Za-z_][A-Za-z0-9_]*=\S+\s+", stripped):
+                    stripped = stripped.split(None, 1)[1]
+                if stripped.startswith(RUNNABLE):
+                    yield os.path.relpath(doc, REPO), stripped
+
+
+def _resolve_target(argv):
+    """The source file a documented command runs, or None when external
+    (pip, python -m pytest, bash -c ...)."""
+    prog = argv[0]
+    if prog in ("pip", "pip3"):
+        return None
+    if prog == "bash":
+        argv = argv[1:]
+        prog = argv[0] if argv else ""
+    if prog.startswith("scripts/") or prog.endswith(".sh"):
+        return prog
+    # python [-m mod | path.py]
+    rest = argv[1:]
+    if rest and rest[0] == "-m":
+        mod = rest[1]
+        if mod.split(".")[0] in ("pytest", "pip"):
+            return None
+        cand = os.path.join(*mod.split(".")) + ".py"
+        for root in ("", "src"):
+            if os.path.exists(os.path.join(REPO, root, cand)):
+                return os.path.join(root, cand)
+        return cand   # will fail the existence assert with a useful name
+    for tok in rest:
+        if tok.endswith(".py"):
+            return tok
+    return None
+
+
+@pytest.mark.smoke
+def test_docs_front_door_exists():
+    assert os.path.exists(os.path.join(REPO, "README.md"))
+    assert os.path.exists(os.path.join(REPO, "docs", "WIRE_FORMAT.md"))
+    readme = open(os.path.join(REPO, "README.md")).read()
+    # the README documents every registry by name
+    for token in ("STRATEGIES", "CODECS", "TASKS", "POLICIES",
+                  "tier_aware", "packed", "docs/WIRE_FORMAT.md"):
+        assert token in readme, f"README.md no longer mentions {token!r}"
+
+
+@pytest.mark.smoke
+def test_doc_commands_reference_real_files_and_flags():
+    commands = list(iter_doc_commands())
+    assert len(commands) >= 5, "docs lost their runnable quickstart commands"
+    checked_flags = 0
+    for doc, line in commands:
+        argv = shlex.split(line)
+        target = _resolve_target(argv)
+        if target is None:
+            continue
+        path = os.path.join(REPO, target)
+        assert os.path.exists(path), f"{doc}: {line!r} references missing " \
+                                     f"{target}"
+        src = open(path).read()
+        for tok in argv[1:]:
+            if tok.startswith("--"):
+                flag = tok.split("=")[0]
+                assert flag in src, f"{doc}: {line!r} passes {flag}, which " \
+                                    f"{target} does not define"
+                checked_flags += 1
+    assert checked_flags >= 5, "doc commands stopped exercising flags"
+
+
+@pytest.mark.smoke
+def test_example_help_parses():
+    """The README's main entry point must import and parse --help — the
+    one subprocess this suite affords (fresh interpreter + jax import)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "fl_end_to_end.py"),
+         "--help"], capture_output=True, text=True, timeout=300, env=env,
+        cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    for flag in ("--task", "--codec", "--codec-policy", "--backend",
+                 "--cohort"):
+        assert flag in out.stdout, f"--help lost {flag}"

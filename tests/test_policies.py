@@ -1,0 +1,282 @@
+"""CodecPolicy subsystem (repro.fl.policies) + per-tier Alg. 5 search.
+
+Three layers of guarantees:
+
+* **Inactive-policy bit-parity** — ``codec_policy="static"`` (the default)
+  and ``tier_aware`` on a tierless fleet must reproduce the pinned
+  pre-policy histories (tests/data/pinned_histories.json) on BOTH
+  simulator backends.
+* **Tier-aware byte accounting** — under heterogeneous tiers, every
+  dispatch is priced by exactly the codec its device's tier was handed,
+  and the per-tier meters match the analytic packed-stream price.
+* **Per-tier Alg. 5** — slower bandwidth tiers end at least as compressed
+  (never more wire bytes per transfer) than faster ones.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.compression import (expected_pytree_wire_bytes,
+                                    expected_tensor_wire_bits)
+from repro.core.dynamic import (DEFAULT_SET_Q, DEFAULT_SET_S, greedy_search,
+                                greedy_search_per_tier)
+from repro.fl.policies import (POLICIES, StalenessAwarePolicy, StaticPolicy,
+                               TierAwarePolicy, make_policy, notch_point)
+from repro.fl.protocols import (TeasqStrategy, make_setup,
+                                profile_compression, run_method)
+from repro.fl.simulator import (ScenarioConfig, SimConfig, TierSpec,
+                                tier_assignment)
+
+PINNED_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "pinned_histories.json")
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    # same generation config as the pinned fixture (cross-checked below)
+    return make_setup(n_devices=8, iid=True, seed=3, n_train=640, n_test=320)
+
+
+# ----------------------------------------------------------------------
+# registry + pure policy mechanics (no simulation)
+# ----------------------------------------------------------------------
+@pytest.mark.smoke
+def test_policy_registry():
+    assert set(POLICIES) == {"static", "tier_aware", "staleness_aware"}
+    assert SimConfig().codec_policy == "static"
+    cfg = SimConfig(n_devices=4)
+    for name, cls in POLICIES.items():
+        assert isinstance(make_policy(name, cfg), cls)
+    with pytest.raises(ValueError, match="unknown codec policy"):
+        make_policy("nope", cfg)
+
+
+@pytest.mark.smoke
+def test_notch_point_steps_toward_more_compression():
+    assert notch_point(0.25, 8, 0) == (0.25, 8)
+    assert notch_point(0.25, 8, 1) == (0.1, 4)
+    # clamped at the most compressed candidates
+    assert notch_point(0.25, 8, 10) == (DEFAULT_SET_S[-1], DEFAULT_SET_Q[-1])
+    # off-grid points snap to the nearest candidate before stepping
+    assert notch_point(0.3, 10, 1) == (0.1, 4)
+
+
+@pytest.mark.smoke
+def test_static_policy_is_the_pre_policy_resolution():
+    from repro.core.codecs import resolve_codec
+    cfg = SimConfig(n_devices=4, codec="dense")
+    pol = StaticPolicy(cfg)
+    # identical cached instance => identical byte accounting + RNG behavior
+    assert pol.codec_for(0, 2, 0.25, 8) is resolve_codec(
+        "dense", 0.25, 8, iters=cfg.cohort_channel_iters)
+    assert pol.codec_for(0, None, 1.0, 32).name == "identity"
+
+
+@pytest.mark.smoke
+def test_tier_aware_operating_points():
+    tiers = [TierSpec(0.5, 1.0, 1.0, "fast"),
+             TierSpec(0.25, 1.5, 0.5, "mid"),
+             TierSpec(0.25, 2.5, 0.125, "slow")]
+    cfg = SimConfig(n_devices=8, scenario=ScenarioConfig(tiers=tiers))
+    pol = TierAwarePolicy(cfg)
+    assert list(pol.tier_of) == list(tier_assignment(8, tiers))
+    # derived notches: log2(1/1)=0, log2(2)=1, log2(8)=3
+    fast = pol.operating_point(pol.context(0, 0), 0.25, 8)
+    mid = pol.operating_point(pol.context(0, 4), 0.25, 8)
+    slow = pol.operating_point(pol.context(0, 6), 0.25, 8)
+    assert fast == (0.25, 8)
+    assert mid == (0.1, 4)
+    assert slow == (0.01, 4)
+    assert fast[0] >= mid[0] >= slow[0] and fast[1] >= mid[1] >= slow[1]
+    # explicit tier_points win (e.g. the per-tier Alg. 5 output)
+    cfg2 = dataclasses.replace(cfg, tier_points=[(0.5, 16), (0.25, 8),
+                                                 (0.05, 4)])
+    pol2 = TierAwarePolicy(cfg2)
+    assert pol2.operating_point(pol2.context(0, 6), 0.25, 8) == (0.05, 4)
+    # device_id=None (legacy one-arg channel_for) => tier-0 point
+    assert pol2.operating_point(pol2.context(0, None), 0.25, 8) == (0.5, 16)
+
+
+@pytest.mark.smoke
+def test_tier_aware_without_tiers_is_inactive():
+    cfg = SimConfig(n_devices=4)
+    pol = TierAwarePolicy(cfg)
+    assert pol.operating_point(pol.context(3, 1), 0.25, 8) == (0.25, 8)
+    # and the resolved codec is the very same cached instance static picks
+    assert pol.codec_for(3, 1, 0.25, 8) is \
+        StaticPolicy(cfg).codec_for(3, 1, 0.25, 8)
+
+
+@pytest.mark.smoke
+def test_staleness_aware_ewma_and_notches():
+    cfg = SimConfig(n_devices=4)
+    pol = StalenessAwarePolicy(cfg)
+    ctx0 = pol.context(0, 1)
+    assert ctx0.staleness == 0.0
+    assert pol.operating_point(ctx0, 0.25, 8) == (0.25, 8)   # fresh: base
+    for _ in range(8):                      # EWMA converges toward 6
+        pol.observe_arrival(1, 6)
+    assert pol.staleness_est[1] > 4.0
+    stale = pol.context(0, 1)
+    assert pol.operating_point(stale, 0.25, 8) == \
+        notch_point(0.25, 8, StalenessAwarePolicy.max_notches)
+    # other devices are untouched
+    assert pol.operating_point(pol.context(0, 0), 0.25, 8) == (0.25, 8)
+    # uncompressed protocols (tea/fedavg) stay dense under every policy
+    assert pol.codec_for(0, 1, 1.0, 32).name == "identity"
+
+
+# ----------------------------------------------------------------------
+# per-tier Alg. 5 search
+# ----------------------------------------------------------------------
+def _synthetic_eval_acc(p_s, p_q):
+    """The test_protocol.py accuracy surface: acc = 0.9 - penalties."""
+    pen_s = {1.0: 0.0, 0.5: 0.005, 0.25: 0.01, 0.1: 0.03,
+             0.05: 0.08, 0.01: 0.2}[p_s]
+    pen_q = {32: 0.0, 16: 0.002, 8: 0.008, 4: 0.06}[p_q]
+    return 0.9 - pen_s - pen_q
+
+
+@pytest.mark.smoke
+def test_greedy_search_per_tier_monotone():
+    """Slower tier => larger accuracy budget => at least as compressed =>
+    never more wire bytes per transfer."""
+    scales = [1.0, 0.5, 0.1]
+    points, traces = greedy_search_per_tier(_synthetic_eval_acc, 0.02,
+                                            scales)
+    assert len(points) == len(traces) == 3
+    # the full-rate tier gets exactly the paper's global search result
+    si, qi, _ = greedy_search(_synthetic_eval_acc, 0.02)
+    assert points[0] == (si, qi)
+    n = 10_000
+    prev_bits = None
+    for (si, qi), b in zip(points, scales):
+        assert 0 <= si < len(DEFAULT_SET_S) and 0 <= qi < len(DEFAULT_SET_Q)
+        bits = expected_tensor_wire_bits(n, DEFAULT_SET_S[si],
+                                         DEFAULT_SET_Q[qi])
+        if prev_bits is not None:
+            assert bits <= prev_bits, \
+                f"slower tier (bw {b}) costs more wire than a faster one"
+        prev_bits = bits
+    # the searched indices themselves are monotone too
+    assert points[0][0] <= points[1][0] <= points[2][0]
+    assert points[0][1] <= points[1][1] <= points[2][1]
+    # strictly more compression is actually reached on this surface
+    assert points[2] != points[0]
+
+
+def test_profile_compression_tiered_returns_points(tiny_setup):
+    data, _, w0 = tiny_setup
+    tiers = [TierSpec(0.5, 1.0, 1.0), TierSpec(0.5, 1.0, 0.25)]
+    points, traces = profile_compression(w0, data, theta=0.05, tiers=tiers)
+    assert len(points) == len(traces) == 2
+    for p_s, p_q in points:
+        assert p_s in DEFAULT_SET_S and p_q in DEFAULT_SET_Q
+    # directly usable as SimConfig.tier_points
+    cfg = SimConfig(n_devices=8, tier_points=points,
+                    scenario=ScenarioConfig(tiers=tiers))
+    pol = TierAwarePolicy(cfg)
+    assert pol.operating_point(pol.context(0, 7), 0.25, 8) == \
+        (float(points[1][0]), int(points[1][1]))
+
+
+# ----------------------------------------------------------------------
+# inactive-policy bit-parity against the pinned pre-policy histories
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("method,backend,policy", [
+    ("teasq", "engine", "static"),
+    ("teasq", "legacy", "static"),
+    ("teasq", "engine", "tier_aware"),
+    ("teasq", "legacy", "tier_aware"),
+    ("fedasync", "engine", "tier_aware"),
+    ("fedavg", "engine", "tier_aware"),
+])
+def test_inactive_policy_pinned_parity(method, backend, policy, tiny_setup):
+    """An explicit static policy — and tier_aware on a fleet with no tiers —
+    must leave every protocol's LogEntry history bit-identical to the
+    pinned pre-policy fixture, on both backends."""
+    with open(PINNED_PATH) as f:
+        pinned = json.load(f)
+    assert pinned["setup"] == dict(n_devices=8, iid=True, seed=3,
+                                   n_train=640, n_test=320)  # == tiny_setup
+    data, parts, w0 = tiny_setup
+    hist = run_method(method, data, parts, w0, backend=backend,
+                      codec_policy=policy, **pinned["run_kw"],
+                      **pinned["runs"][method])
+    got = [dataclasses.asdict(h) for h in hist]
+    assert got == pinned["histories"][method], \
+        f"{method}/{backend}/{policy} drifted from the pre-policy fixture"
+
+
+# ----------------------------------------------------------------------
+# tier-aware end-to-end byte accounting
+# ----------------------------------------------------------------------
+def test_tier_aware_per_tier_byte_accounting(tiny_setup):
+    """Heterogeneous run: every dispatch must be priced by exactly the codec
+    its device's tier was handed, the per-tier meters must match the
+    analytic packed-stream price, and the slow tier must pay strictly fewer
+    bytes per transfer than the fast tier."""
+    from repro.fl.engine import FLEngine
+
+    data, parts, w0 = tiny_setup
+    tiers = [TierSpec(0.5, 1.0, 1.0, "fast"),
+             TierSpec(0.5, 1.0, 0.125, "slow")]
+    tier_points = [(0.25, 8), (0.01, 4)]
+    cfg = SimConfig(method="teasq", n_devices=len(parts), p_s=0.25, p_q=8,
+                    epochs=1, batch_size=8, seed=3, c_fraction=0.5,
+                    gamma=0.25, codec_policy="tier_aware",
+                    tier_points=tier_points,
+                    scenario=ScenarioConfig(tiers=tiers))
+
+    class Recording(TeasqStrategy):
+        def __init__(self, cfg):
+            super().__init__(cfg)
+            self.seen = []
+
+        def channel_for(self, t, device_id=None):
+            codec = super().channel_for(t, device_id)
+            self.seen.append((device_id, codec))
+            return codec
+
+    strat = Recording(cfg)
+    eng = FLEngine(data, parts, w0, cfg, strategy=strat)
+    hist = eng.run(time_budget=3.0, eval_every=10 ** 9)
+
+    tier_of = tier_assignment(len(parts), tiers)
+    prices = [expected_pytree_wire_bytes(w0, p_s, p_q)
+              for p_s, p_q in tier_points]
+    assert prices[1] < prices[0]        # slow tier: strictly cheaper/upload
+
+    assert strat.seen and {tier_of[d] for d, _ in strat.seen} == {0, 1}
+    expected = {0: 0, 1: 0}
+    for d, codec in strat.seen:
+        tier = int(tier_of[d])
+        # the codec handed out is the tier's searched operating point...
+        assert (codec.p_s, codec.p_q) == tier_points[tier]
+        # ...and its price is the analytic packed-stream price
+        assert codec.wire_bytes(w0) == prices[tier]
+        expected[tier] += prices[tier]
+
+    # serial path: down + up per dispatch, both through the tier's codec
+    assert eng.channel.tier_down == expected
+    assert eng.channel.tier_up == expected
+    assert hist[-1].bytes_down == sum(expected.values())
+    assert hist[-1].bytes_up == sum(expected.values())
+    assert hist[-1].max_model_bytes_up == prices[0]
+
+
+def test_staleness_aware_never_exceeds_static_bytes(tiny_setup):
+    """staleness_aware only ever adds compression notches, so a run's total
+    wire bytes are bounded by the static policy's run (equal only if no
+    device ever crossed the staleness threshold)."""
+    data, parts, w0 = tiny_setup
+    kw = dict(time_budget=4.0, epochs=1, seed=3, p_s=0.25, p_q=8)
+    h_static = run_method("teasq", data, parts, w0, backend="engine", **kw)
+    h_stale = run_method("teasq", data, parts, w0, backend="engine",
+                         codec_policy="staleness_aware", **kw)
+    assert h_stale[-1].bytes_up > 0
+    assert h_stale[-1].bytes_up <= h_static[-1].bytes_up
+    assert h_stale[-1].max_model_bytes_up <= h_static[-1].max_model_bytes_up
