@@ -17,6 +17,7 @@ import argparse
 import functools
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -27,6 +28,56 @@ from repro.fl.protocols import (best_acc_within, make_setup,
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "paper_bench.json")
+
+# the standard Linux locations of gperftools' malloc (the olmax/HomebrewNLP
+# JAX training scripts LD_PRELOAD it for large-N host workloads); absent
+# libraries are skipped, the tuning degrades gracefully
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+_HOST_TUNED_MARKER = "_REPRO_HOST_TUNED"
+
+
+def maybe_reexec_host_tuned(enable: bool, host_devices: int = 0) -> bool:
+    """Re-exec the current process with olmax-style host tuning applied:
+    ``LD_PRELOAD`` tcmalloc (a loader setting — it cannot be enabled from
+    inside a running process, hence the ``os.execve``) and, when
+    ``host_devices > 0``, ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    so XLA partitions the host CPU into that many logical devices (must be
+    set before jax initializes — the re-exec'd process imports jax fresh).
+
+    Call this as early as possible in a benchmark ``main()``.  Returns
+    ``False`` when tuning is disabled or already applied (the re-exec'd
+    process carries the ``_REPRO_HOST_TUNED`` marker, which both prevents an
+    exec loop and tells the benchmark the run is host-tuned); on success the
+    call does not return at all."""
+    if os.environ.get(_HOST_TUNED_MARKER):
+        return False
+    if not enable:
+        return False
+    env = dict(os.environ, **{_HOST_TUNED_MARKER: "1"})
+    for path in TCMALLOC_PATHS:
+        if os.path.exists(path):
+            env["LD_PRELOAD"] = path
+            # silence tcmalloc's large-alloc warnings for big numpy buffers
+            env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+            break
+    if host_devices > 0:
+        flag = f"--xla_force_host_platform_device_count={host_devices}"
+        env["XLA_FLAGS"] = " ".join(
+            x for x in (flag, os.environ.get("XLA_FLAGS", "")) if x)
+    # sys.orig_argv keeps the real command line (incl. `-m benchmarks.x`)
+    argv = list(getattr(sys, "orig_argv", None)
+                or [sys.executable] + sys.argv)
+    os.execve(sys.executable, argv, env)
+    return True   # unreachable; keeps the signature honest for linters
+
+
+def host_tuning_active() -> bool:
+    """True inside a process re-exec'd by :func:`maybe_reexec_host_tuned`."""
+    return bool(os.environ.get(_HOST_TUNED_MARKER))
 
 
 class Scale:

@@ -17,9 +17,21 @@ aggressively packed updates while full-rate tiers stay near-dense; per-tier
 uplink totals are metered exactly and logged under the task's
 ``tier_aware`` key.
 
+``--scheduler batched`` switches the engine's event loop to
+``repro.fl.engine.BatchedEngine`` (resident per-device event arrays,
+vectorized next-K selection — bit-identical histories, see
+tests/test_batched_engine.py) and runs it solo: at 10^4-10^5 devices the
+quantity of interest is the per-task dispatch cost (``ms_per_task``), logged
+under the task's ``batched`` key, against the heap rows already in the
+results file.  ``--host-tuning`` re-execs with the olmax-style host setup
+(tcmalloc LD_PRELOAD when present, optional
+``--xla_force_host_platform_device_count`` via ``--host-devices``).
+
   PYTHONPATH=src python -m benchmarks.engine_scale [--budget 30] [--devices 1000]
   PYTHONPATH=src python -m benchmarks.engine_scale --task transformer_lm
   PYTHONPATH=src python -m benchmarks.engine_scale --tiered --devices 120 --samples 6000 --budget 6
+  PYTHONPATH=src python -m benchmarks.engine_scale --scheduler batched \\
+      --devices 100000 --samples 100000 --cohort 256 --budget 8 --host-tuning
 """
 from __future__ import annotations
 
@@ -28,6 +40,8 @@ import dataclasses
 import json
 import os
 import time
+
+from benchmarks.common import host_tuning_active, maybe_reexec_host_tuned
 
 import jax
 
@@ -42,7 +56,8 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
 
 
 def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
-                 cohort_size: int = 0, task: str = "fmnist_cnn") -> SimConfig:
+                 cohort_size: int = 0, task: str = "fmnist_cnn",
+                 scheduler: str = "heap") -> SimConfig:
     """TEASQ at N devices with a constant K=10 aggregation cache and a
     200 kHz cell (longer rounds keep the demo's virtual-task count sane)."""
     return SimConfig(
@@ -50,28 +65,33 @@ def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
         gamma=10.0 / n_devices, epochs=1, batch_size=batch_size,
         p_s=0.25, p_q=8, seed=seed,
         wireless=WirelessConfig(bandwidth_hz=2e5),
-        cohort_size=cohort_size, cohort_channel_iters=6)
+        cohort_size=cohort_size, cohort_channel_iters=6,
+        scheduler=scheduler)
 
 
 def run_one(data, n_train: int, n_devices: int, backend: str,
             cohort_size: int, budget: float, seed: int = 0,
-            task: str = "fmnist_cnn") -> dict:
+            task: str = "fmnist_cnn", scheduler: str = "heap") -> dict:
     parts = partition_iid(n_train, n_devices, seed)
     w0 = get_task(task).init_params(jax.random.PRNGKey(seed))
     cfg = scale_config(n_devices, seed=seed, cohort_size=cohort_size,
-                       task=task)
+                       task=task, scheduler=scheduler)
     sim = make_sim(data, parts, w0, cfg, backend=backend)
     t0 = time.perf_counter()
     hist = sim.run(time_budget=budget, eval_every=10 ** 9)
     wall = time.perf_counter() - t0
     stats = getattr(sim, "stats", None)
+    tasks = stats.completions if stats is not None else None
     return {
-        "task": task, "backend": backend, "n_devices": n_devices,
+        "task": task, "backend": backend, "scheduler": scheduler,
+        "n_devices": n_devices,
         "cohort_size": cohort_size, "wall_s": wall, "budget": budget,
         "rounds": hist[-1].round, "accuracy": hist[-1].accuracy,
         "bytes_up_mb": hist[-1].bytes_up / 1e6,
-        "tasks": stats.completions if stats is not None else None,
+        "tasks": tasks,
+        "ms_per_task": wall * 1e3 / tasks if tasks else None,
         "flushes": stats.flushes if stats is not None else None,
+        "host_tuning": host_tuning_active(),
     }
 
 
@@ -173,9 +193,83 @@ def main():
                          "the scale race: heterogeneous bandwidth tiers, "
                          "per-device codecs, per-tier uplink metering "
                          "(logged under the task's 'tier_aware' key)")
+    ap.add_argument("--scheduler", choices=("heap", "batched"),
+                    default="heap",
+                    help="engine event loop (SimConfig.scheduler); 'batched'"
+                         " runs solo and logs ms_per_task under the task's "
+                         "'batched' key")
+    ap.add_argument("--host-tuning", action="store_true",
+                    help="re-exec with tcmalloc LD_PRELOAD (when installed) "
+                         "and optional XLA host-device partitioning before "
+                         "jax initializes")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="with --host-tuning: value for "
+                         "--xla_force_host_platform_device_count (0 = "
+                         "leave XLA_FLAGS untouched)")
+    ap.add_argument("--dispatch-bench", action="store_true",
+                    help="dispatch-isolated microbenchmark: heap@1000 vs "
+                         "batched@--devices on a compute-light TEASQ "
+                         "workload (fmnist_mlp, one sample per device = "
+                         "zero local minibatches), so ms_per_task measures "
+                         "the scheduler, not the model; logs the pair + "
+                         "cost ratio under fmnist_mlp's 'dispatch' key")
     args = ap.parse_args()
+    maybe_reexec_host_tuned(args.host_tuning, args.host_devices)
+
+    if args.dispatch_bench:
+        # Training and Eqs. 6-10 aggregation are bit-identical work under
+        # both schedulers, so an end-to-end ms_per_task at a real model
+        # mostly measures the model.  This pair holds per-task protocol
+        # compute near zero and varies only (scheduler, N): wall/tasks is
+        # then the per-task dispatch cost the ROADMAP item targets.
+        task = "fmnist_mlp"
+        rows = {}
+        # heap@1000 and batched@N get full budgets; heap@N gets a short one
+        # (it exists to price the heap at the same N, not to run long)
+        for scheduler, n, budget in (
+                ("heap", 1000, 20.0),
+                ("heap", args.devices, min(args.budget, 0.6)),
+                ("batched", args.devices, args.budget)):
+            data = get_task(task).make_data(n, 1000, 0)
+            r = run_one(data, n, n, "engine", args.cohort, budget,
+                        task=task, scheduler=scheduler)
+            rows[f"{scheduler}_n{n}"] = r
+            print(f"engine_scale/{task}/dispatch_{scheduler}_n{n},"
+                  f"{(r['ms_per_task'] or 0) * 1e3:.1f},"
+                  f"wall={r['wall_s']:.1f}s tasks={r['tasks']} "
+                  f"ms_per_task={r['ms_per_task']:.3f}", flush=True)
+        same_n = (rows[f"heap_n{args.devices}"]["ms_per_task"]
+                  / rows[f"batched_n{args.devices}"]["ms_per_task"])
+        print(f"engine_scale/{task}/dispatch_same_n_ratio,{same_n:.2f},"
+              f"heap vs batched @ N={args.devices}")
+        os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
+                    exist_ok=True)
+        merged = _merge_results(
+            RESULTS_PATH, task,
+            {"dispatch": {**rows, "same_n_ratio": same_n}})
+        with open(RESULTS_PATH, "w") as f:
+            json.dump(merged, f, indent=1)
+        return
 
     data = get_task(args.task).make_data(args.samples, 1000, 0)
+
+    if args.scheduler == "batched" and not args.tiered:
+        # solo batched run: the heap rows in the results file are the
+        # baseline; re-running the legacy loop at 10^5 devices would take
+        # hours for a number the file already has
+        r = run_one(data, args.samples, args.devices, "engine", args.cohort,
+                    args.budget, task=args.task, scheduler="batched")
+        ms = r["ms_per_task"] or float("nan")
+        print(f"engine_scale/{args.task}/batched_n{args.devices},"
+              f"{ms * 1e3:.1f},"
+              f"wall={r['wall_s']:.1f}s tasks={r['tasks']} "
+              f"rounds={r['rounds']} ms_per_task={ms:.3f}", flush=True)
+        os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
+                    exist_ok=True)
+        merged = _merge_results(RESULTS_PATH, args.task, {"batched": r})
+        with open(RESULTS_PATH, "w") as f:
+            json.dump(merged, f, indent=1)
+        return
 
     if args.tiered:
         r = run_tiered(data, args.samples, args.devices, args.budget,

@@ -6,8 +6,9 @@ default, or any other entry in ``repro.fl.tasks.TASKS`` such as
 hundred simulated seconds (several hundred aggregation rounds for the async
 methods) and prints the Table-5-style comparison.  Runs on the
 strategy-based ``FLEngine`` by default; ``--backend legacy`` selects the
-monolithic reference simulator and ``--cohort 32`` enables vectorized
-cohort training.
+monolithic reference simulator, ``--cohort 32`` enables vectorized
+cohort training, and ``--scheduler batched`` swaps in the array-backed
+batched event scheduler (bit-identical histories).
 
 ``--codec-policy tier_aware`` demos the adaptive per-device codec layer: a
 heterogeneous 3-tier fleet where the per-tier Alg. 5 search gives each
@@ -42,6 +43,13 @@ def main():
     ap.add_argument("--cohort", type=int, default=0,
                     help="engine cohort size (>0 = vectorized local "
                          "training for the async methods)")
+    ap.add_argument("--scheduler", choices=("heap", "batched"),
+                    default="heap",
+                    help="engine event loop (SimConfig.scheduler): the "
+                         "reference one-event-at-a-time heap, or the "
+                         "array-backed batched scheduler — bit-identical "
+                         "histories, built for 10^4-10^5-device fleets "
+                         "(default: %(default)s)")
     ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
                     help="model family to train (repro.fl.tasks.TASKS): the "
                          "paper's FMNIST CNN, a tiny transformer LM on a "
@@ -104,6 +112,7 @@ def main():
         hist = run_method(method, data, parts, w0, iid=iid,
                           time_budget=args.budget, epochs=1, eval_every=4,
                           backend=args.backend, cohort_size=args.cohort,
+                          scheduler=args.scheduler,
                           codec=args.codec, task=args.task, **policy_kw,
                           **kw)
         best = max(h.accuracy for h in hist)

@@ -30,19 +30,38 @@ RUNS = {
     "fedavg": dict(devices_per_round=3),
 }
 
+# The batched-scheduler fixtures (tests/test_batched_engine.py): the same
+# tiny workload run through SimConfig.scheduler="batched", including one
+# cohort-trainer config so the deferred path is pinned too.  The parity
+# test replays each under BOTH schedulers, so these fixtures also pin the
+# heap path onto the batched histories.
+RUNS_BATCHED = {
+    "teasq": dict(p_s=0.25, p_q=8, cohort_size=4, scheduler="batched"),
+    "fedasync": dict(scheduler="batched"),
+    "fedavg": dict(devices_per_round=3, scheduler="batched"),
+}
 
-def main():
-    data, parts, w0 = make_setup(**SETUP)
+
+def _dump(data, parts, w0, runs, tag):
     hists = {}
-    for method, kw in RUNS.items():
+    for method, kw in runs.items():
         hist = run_method(method, data, parts, w0, backend="engine",
                           **RUN_KW, **kw)
         hists[method] = [dataclasses.asdict(h) for h in hist]
-        print(f"{method}: {len(hist)} entries, last round {hist[-1].round}")
+        print(f"{tag}/{method}: {len(hist)} entries, "
+              f"last round {hist[-1].round}")
+    return hists
+
+
+def main():
+    data, parts, w0 = make_setup(**SETUP)
+    hists = _dump(data, parts, w0, RUNS, "heap")
+    hists_batched = _dump(data, parts, w0, RUNS_BATCHED, "batched")
     os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump({"setup": SETUP, "run_kw": RUN_KW, "runs": RUNS,
-                   "histories": hists}, f, indent=1)
+                   "histories": hists, "runs_batched": RUNS_BATCHED,
+                   "histories_batched": hists_batched}, f, indent=1)
     print(f"wrote {os.path.abspath(OUT)}")
 
 

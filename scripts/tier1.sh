@@ -4,10 +4,13 @@
 # 1. the pinned tier-1 suite (ROADMAP.md):  python -m pytest -x -q
 #    (pytest.ini excludes the opt-in wall-clock `scale` marker)
 # 2. the fast smoke subset: the benchmark harness smoke tests
-#    (tests/test_codec_throughput.py) and the FLTask registry conformance
+#    (tests/test_codec_throughput.py), the FLTask registry conformance
 #    fast subset (tests/test_tasks.py — per-task loss/grad/cohort/codec
-#    checks on tiny configs; the end-to-end runs stay tier-1-only) —
-#    <60 s total
+#    checks on tiny configs; the end-to-end runs stay tier-1-only), and
+#    the batched-scheduler smoke slice (tests/test_batched_engine.py —
+#    small batched end-to-end runs on teasq and fedavg plus the
+#    EventTable/registry unit checks, so every build exercises BOTH
+#    SimConfig.scheduler paths) — <60 s total
 # 3. the docs check: tests/test_docs.py parses the fenced commands in
 #    README.md and docs/*.md and verifies every referenced file and flag
 #    exists (so the documentation front door cannot silently rot)

@@ -87,9 +87,11 @@ class CodecPolicy(abc.ABC):
       compressing dispatches and binds the (possibly per-device) point to
       the configured ``SimConfig.codec`` family.
     * :meth:`operating_point` — the policy decision itself; override this.
-    * :meth:`observe_arrival` — both backends call this when an upload
-      lands, with the arrival's staleness in aggregation rounds; the base
-      class keeps a per-device EWMA for staleness-aware policies.  Draws no
+    * :meth:`observe_arrival` / :meth:`observe_arrivals` — fed when
+      uploads land, with each arrival's staleness in aggregation rounds;
+      the base class keeps a per-device EWMA, updated through one
+      vectorized scatter (the scalar hook is a singleton group of the
+      batched one, so every engine shares one numeric path).  Draws no
       RNG, so inactive policies leave event streams bit-identical.
     """
 
@@ -113,11 +115,31 @@ class CodecPolicy(abc.ABC):
         return device_id is not None and 0 <= device_id < len(self.tier_of)
 
     def observe_arrival(self, device_id: int, staleness: float) -> None:
-        if not self._known(device_id):
+        self.observe_arrivals([device_id], [staleness])
+
+    def observe_arrivals(self, device_ids, staleness) -> None:
+        """Vectorized EWMA scatter over a group of arrivals — the batched
+        hook ``BatchedEngine`` feeds (the heap path routes its per-event
+        ``observe_arrival`` through the same code, so the two schedulers
+        share one numeric path).  Unknown device ids are dropped, exactly
+        like the scalar hook.  EWMA updates to *different* devices commute,
+        so a unique-id group is one fused scatter; repeated ids within a
+        group fall back to in-order scalar updates (per-device EWMA steps
+        do not commute)."""
+        ids = np.asarray(device_ids, np.int64)
+        st = np.asarray(staleness, np.float64)
+        ok = (ids >= 0) & (ids < len(self.tier_of))
+        if not ok.all():
+            ids, st = ids[ok], st[ok]
+        if not len(ids):
             return
         b = self.staleness_beta
-        self.staleness_est[device_id] = (
-            (1.0 - b) * self.staleness_est[device_id] + b * staleness)
+        est = self.staleness_est
+        if len(ids) == 1 or len(np.unique(ids)) == len(ids):
+            est[ids] = (1.0 - b) * est[ids] + b * st
+        else:
+            for i, s in zip(ids.tolist(), st.tolist()):
+                est[i] = (1.0 - b) * est[i] + b * s
 
     def context(self, t: int, device_id: Optional[int]) -> DispatchContext:
         known = self._known(device_id)
@@ -150,6 +172,9 @@ class StaticPolicy(CodecPolicy):
 
     def observe_arrival(self, device_id, staleness) -> None:
         pass                                  # keeps the hot path trivial
+
+    def observe_arrivals(self, device_ids, staleness) -> None:
+        pass
 
     def operating_point(self, ctx, p_s, p_q):
         return p_s, p_q

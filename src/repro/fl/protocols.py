@@ -88,6 +88,26 @@ class ProtocolStrategy(abc.ABC):
         raise NotImplementedError(
             f"{self.method} is not an event-driven protocol")
 
+    # -- batched hooks (BatchedEngine) ----------------------------------
+    # The batched scheduler talks to strategies through group-shaped hooks;
+    # both default to the serial hooks item-by-item, which is what keeps
+    # the batched engine bit-identical to the heap engine.  A protocol that
+    # tolerates coarser interleaving (no per-arrival eval logging between
+    # group members) can override them to fuse work across a group — e.g.
+    # one fused Eqs. 6-10 cache update for a burst of same-time arrivals.
+
+    def channels_for(self, t: int, device_ids) -> List[Codec]:
+        """Batched grant hook: the wire codec for each device of a round-
+        ``t`` dispatch group.  Default: ``channel_for`` per device."""
+        return [self.channel_for(t, device_id=int(k)) for k in device_ids]
+
+    def on_arrivals(self, engine, arrivals) -> List[bool]:
+        """Batched arrival hook: ``arrivals`` is ``[(now, k, payload, h),
+        ...]`` in event order; returns the per-arrival done-round flags.
+        Default: the serial ``on_arrival`` in order."""
+        return [self.on_arrival(engine, now, k, payload, h)
+                for now, k, payload, h in arrivals]
+
     def aggregate(self, engine, updates: List[Any],
                   weights: List[int]) -> Any:
         raise NotImplementedError(
@@ -247,13 +267,22 @@ def make_setup(n_devices: int = 100, iid: bool = True, seed: int = 0,
 
 def make_sim(data, parts, w0, cfg: SimConfig, backend: str = "engine"):
     """Build a runnable simulator: the strategy-based engine (default) or
-    the legacy monolithic FLSimulator (kept as the parity reference)."""
+    the legacy monolithic FLSimulator (kept as the parity reference).
+    ``cfg.scheduler`` picks the engine's event loop — the reference
+    ``"heap"`` or the array-backed ``"batched"`` one (bit-identical
+    histories; see ``repro.fl.engine.SCHEDULERS``)."""
     if backend == "legacy":
         return FLSimulator(data, parts, w0, cfg)
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r}")
-    from repro.fl.engine import FLEngine
-    return FLEngine(data, parts, w0, cfg)
+    from repro.fl.engine import SCHEDULERS
+    try:
+        engine_cls = SCHEDULERS[cfg.scheduler]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {cfg.scheduler!r}; "
+            f"expected one of {sorted(SCHEDULERS)}") from None
+    return engine_cls(data, parts, w0, cfg)
 
 
 def train_global(data, parts, w0, time_budget: float = 20.0, seed: int = 0,

@@ -1,0 +1,84 @@
+"""Shared fixtures + run-and-compare helpers for the parity suites.
+
+The history-comparison loop used to live inside tests/test_engine_parity.py;
+it is factored out here so the backend-parity suite (engine vs legacy
+simulator) and the scheduler-parity suite (batched vs heap engine,
+tests/test_batched_engine.py) assert bit-equality through ONE shared
+implementation instead of drifting copies.
+
+``tiny_setup`` is the canonical parity workload (8 devices, tiny synthetic
+FMNIST CNN, seed 3) — the same config ``scripts/dump_pinned_histories.py``
+records into tests/data/pinned_histories.json, cross-checked by the pinned
+tests so the fixture and the suites cannot drift apart silently.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.fl.protocols import make_setup, run_method
+
+PINNED_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "pinned_histories.json")
+
+# the generation config of the pinned fixture (see dump_pinned_histories.py)
+TINY_SETUP = dict(n_devices=8, iid=True, seed=3, n_train=640, n_test=320)
+TINY_RUN_KW = dict(time_budget=4.0, epochs=1, seed=3)
+
+
+@pytest.fixture(scope="session")
+def tiny_setup():
+    """(data, partitions, w0) for the canonical 8-device parity workload."""
+    return make_setup(**TINY_SETUP)
+
+
+def assert_histories_equal(h_a, h_b):
+    """Field-by-field bit-equality of two LogEntry histories."""
+    assert len(h_a) == len(h_b)
+    for a, b in zip(h_a, h_b):
+        assert a.time == b.time
+        assert a.round == b.round
+        assert a.accuracy == b.accuracy
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_down == b.bytes_down
+        assert a.max_model_bytes_up == b.max_model_bytes_up
+        assert a.max_model_bytes_down == b.max_model_bytes_down
+
+
+def assert_engine_state_equal(eng_a, eng_b):
+    """Beyond the logged history: the two engines' channel meters (totals,
+    maxima, per-tier dicts), per-device completion counts, scenario
+    counters, and liveness must agree — the observable footprint of the
+    event order."""
+    ca, cb = eng_a.channel, eng_b.channel
+    assert (ca.bytes_up, ca.bytes_down) == (cb.bytes_up, cb.bytes_down)
+    assert (ca.max_up, ca.max_down) == (cb.max_up, cb.max_down)
+    assert ca.tier_up == cb.tier_up
+    assert ca.tier_down == cb.tier_down
+    sa, sb = eng_a.stats, eng_b.stats
+    assert (sa.dispatches, sa.completions, sa.dropouts,
+            sa.transient_failures, sa.redispatched) == \
+           (sb.dispatches, sb.completions, sb.dropouts,
+            sb.transient_failures, sb.redispatched)
+    assert np.array_equal(sa.completed_per_device, sb.completed_per_device)
+    assert np.array_equal(eng_a.devices.alive, eng_b.devices.alive)
+
+
+def run_tiny(method, setup, **kw):
+    """One engine-backend run of the canonical parity workload (the shared
+    TINY_RUN_KW, overridable per call)."""
+    data, parts, w0 = setup
+    merged = {**TINY_RUN_KW, "backend": "engine", **kw}
+    return run_method(method, data, parts, w0, **merged)
+
+
+def run_both_backends(method, setup, **kw):
+    """(engine history, legacy history) on the canonical workload."""
+    return (run_tiny(method, setup, **kw),
+            run_tiny(method, setup, backend="legacy", **kw))
+
+
+def run_both_schedulers(method, setup, **kw):
+    """(heap history, batched history) on the canonical workload."""
+    return (run_tiny(method, setup, scheduler="heap", **kw),
+            run_tiny(method, setup, scheduler="batched", **kw))
