@@ -41,6 +41,43 @@ RUNS_BATCHED = {
     "fedavg": dict(devices_per_round=3, scheduler="batched"),
 }
 
+# The single-task-fleet fixtures (tests/test_fleet.py): the same tiny
+# workload driven through repro.fl.fleet.MultiTaskEngine as a degenerate
+# one-task fleet, on both schedulers.  By construction these must be
+# bit-identical to the engine histories above (same configs), which the
+# fleet test asserts — so the fleet loop is pinned both against the
+# known-good revision AND onto the engine fixtures.
+RUNS_FLEET = {
+    "teasq": dict(p_s=0.25, p_q=8),
+    "fedasync": {},
+}
+
+
+def _dump_fleet(data, parts, w0):
+    from repro.fl.fleet import FleetConfig, MultiTaskEngine
+    from repro.fl.simulator import SimConfig
+    out = {}
+    for scheduler in ("heap", "batched"):
+        hists = {}
+        for method, kw in RUNS_FLEET.items():
+            run = {**RUN_KW, **kw}
+            time_budget = run.pop("time_budget")
+            # mirror run_method's SimConfig defaults (see run_tiny_fleet in
+            # tests/test_fleet.py, which replays this fixture)
+            spec = SimConfig(method=method, n_devices=SETUP["n_devices"],
+                             c_fraction=0.1, mu=0.01, alpha=0.6,
+                             p_s=run.pop("p_s", 0.25),
+                             p_q=run.pop("p_q", 8), **run)
+            fleet = MultiTaskEngine([data], [parts], [w0], FleetConfig(
+                tasks=[spec], n_devices=SETUP["n_devices"], seed=spec.seed,
+                scheduler=scheduler))
+            hist = fleet.run(time_budget=time_budget)[0]
+            hists[method] = [dataclasses.asdict(h) for h in hist]
+            print(f"fleet/{scheduler}/{method}: {len(hist)} entries, "
+                  f"last round {hist[-1].round}")
+        out[scheduler] = hists
+    return out
+
 
 def _dump(data, parts, w0, runs, tag):
     hists = {}
@@ -57,11 +94,14 @@ def main():
     data, parts, w0 = make_setup(**SETUP)
     hists = _dump(data, parts, w0, RUNS, "heap")
     hists_batched = _dump(data, parts, w0, RUNS_BATCHED, "batched")
+    hists_fleet = _dump_fleet(data, parts, w0)
     os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump({"setup": SETUP, "run_kw": RUN_KW, "runs": RUNS,
                    "histories": hists, "runs_batched": RUNS_BATCHED,
-                   "histories_batched": hists_batched}, f, indent=1)
+                   "histories_batched": hists_batched,
+                   "runs_fleet": RUNS_FLEET,
+                   "histories_fleet": hists_fleet}, f, indent=1)
     print(f"wrote {os.path.abspath(OUT)}")
 
 

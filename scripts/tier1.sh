@@ -6,11 +6,15 @@
 # 2. the fast smoke subset: the benchmark harness smoke tests
 #    (tests/test_codec_throughput.py), the FLTask registry conformance
 #    fast subset (tests/test_tasks.py — per-task loss/grad/cohort/codec
-#    checks on tiny configs; the end-to-end runs stay tier-1-only), and
-#    the batched-scheduler smoke slice (tests/test_batched_engine.py —
+#    checks on tiny configs; the end-to-end runs stay tier-1-only), the
+#    batched-scheduler smoke slice (tests/test_batched_engine.py —
 #    small batched end-to-end runs on teasq and fedavg plus the
 #    EventTable/registry unit checks, so every build exercises BOTH
-#    SimConfig.scheduler paths) — <60 s total
+#    SimConfig.scheduler paths), and the multi-task fleet smoke slice
+#    (tests/test_fleet.py — ASSIGNERS unit checks plus a 4-family
+#    heterogeneous shared-fleet run, so every build exercises the
+#    repro.fl.fleet layer; the bit-parity and checkpoint/resume tests
+#    stay tier-1-only) — <60 s total
 # 3. the docs check: tests/test_docs.py parses the fenced commands in
 #    README.md and docs/*.md and verifies every referenced file and flag
 #    exists (so the documentation front door cannot silently rot)

@@ -37,12 +37,54 @@ def save_pytree(path: str, tree: Any) -> None:
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes must match)."""
+    """Restore into the structure of ``like``, validating the stored
+    treedef, per-leaf dtypes and shapes against it — a checkpoint written
+    from a different model structure fails loudly instead of silently
+    coercing leaves by position."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, raw=True)
     leaves = [_decode(l) for l in payload[b"leaves"]]
     flat, treedef = jax.tree_util.tree_flatten(like)
-    assert len(flat) == len(leaves), "checkpoint/pytree structure mismatch"
-    restored = [jnp.asarray(l).astype(f.dtype).reshape(f.shape)
-                for l, f in zip(leaves, flat)]
+    stored_treedef = payload[b"treedef"].decode()
+    if stored_treedef != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef mismatch at {path!r}:\n"
+            f"  stored:   {stored_treedef}\n  expected: {str(treedef)}")
+    if len(flat) != len(leaves):
+        raise ValueError(
+            f"checkpoint at {path!r} holds {len(leaves)} leaves, "
+            f"`like` has {len(flat)}")
+    restored = []
+    for i, (l, f) in enumerate(zip(leaves, flat)):
+        l = np.asarray(l)
+        want = np.asarray(f)
+        if l.dtype != want.dtype:
+            raise ValueError(
+                f"checkpoint leaf {i} dtype mismatch at {path!r}: "
+                f"stored {l.dtype}, expected {want.dtype}")
+        if l.shape != want.shape:
+            raise ValueError(
+                f"checkpoint leaf {i} shape mismatch at {path!r}: "
+                f"stored {l.shape}, expected {want.shape}")
+        restored.append(jnp.asarray(l))
     return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+# ----------------------------------------------------------------------
+# Generic state blobs (simulator checkpoint/resume)
+# ----------------------------------------------------------------------
+# ``FLEngine.state_dict()`` / ``MultiTaskEngine.state_dict()`` produce plain
+# nested dicts/lists of scalars, strings and numpy arrays; these two
+# round-trip such a structure through one msgpack file (arrays via the same
+# ndarray extension hook as the pytree format above).
+
+def save_blob(path: str, obj: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(obj, default=_encode, use_bin_type=True))
+
+
+def load_blob(path: str) -> Any:
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read(), object_hook=_decode, raw=False,
+                               strict_map_key=False)

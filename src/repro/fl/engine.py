@@ -151,16 +151,22 @@ class EventTable:
         self.seq = np.zeros(n, np.int64)
         self.kind = np.zeros(n, np.int8)
         self.h = np.zeros(n, np.int64)
+        # which FL job an event belongs to: 0 for the single-task engines,
+        # the task index (or -1 = assign-on-handling) under a multi-task
+        # fleet (repro.fl.fleet) — carried through select_batch gathers
+        # exactly like ``h``
+        self.task = np.zeros(n, np.int32)
         self.payload: List[Any] = [None] * n
 
     def put(self, k: int, t: float, seq: int, kind: str, payload: Any,
-            h: int) -> None:
+            h: int, task: int = 0) -> None:
         assert self.time[k] == np.inf, \
             f"device {k} already has a scheduled event"
         self.time[k] = t
         self.seq[k] = seq
         self.kind[k] = KIND_IDS[kind]
         self.h[k] = h
+        self.task[k] = task
         self.payload[k] = payload
 
     def clear(self, k: int) -> None:
@@ -479,6 +485,26 @@ class CohortTrainer:
 
 
 # ----------------------------------------------------------------------
+# Checkpoint helpers (engine + fleet state_dict/load_state)
+# ----------------------------------------------------------------------
+def _pack_rng(rng: np.random.RandomState) -> List[Any]:
+    name, keys, pos, has_gauss, cached = rng.get_state()
+    return [name, np.asarray(keys), int(pos), int(has_gauss), float(cached)]
+
+
+def _load_rng(rng: np.random.RandomState, packed) -> None:
+    rng.set_state((packed[0], np.asarray(packed[1], np.uint32),
+                   int(packed[2]), int(packed[3]), float(packed[4])))
+
+
+def _trees_equal(a: Any, b: Any) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ----------------------------------------------------------------------
 # The engine
 # ----------------------------------------------------------------------
 class FLEngine:
@@ -489,14 +515,26 @@ class FLEngine:
 
     def __init__(self, data: Dict[str, np.ndarray],
                  partitions: List[np.ndarray], w_init: Any, cfg: SimConfig,
-                 strategy: Optional[Any] = None):
+                 strategy: Optional[Any] = None, *,
+                 rng: Optional[np.random.RandomState] = None,
+                 devices: Optional[DeviceRegistry] = None,
+                 scenario_rng: Optional[np.random.RandomState] = None):
+        """``rng`` / ``devices`` / ``scenario_rng`` let a multi-task fleet
+        (``repro.fl.fleet.MultiTaskEngine``) share one seeded RNG stream and
+        one :class:`DeviceRegistry` across several per-task engines; when a
+        registry is injected the fleet owns tier application and the event
+        loop, and this engine acts as a per-task runtime (its handlers are
+        driven by the fleet's scheduler).  Standalone construction (the
+        default) is unchanged and draws the RNG in the legacy order."""
         self.cfg = cfg
         self.data = data
         self.partitions = partitions
-        self.rng = np.random.RandomState(cfg.seed)
+        self.shared_fleet = devices is not None
+        self.rng = np.random.RandomState(cfg.seed) if rng is None else rng
         n = cfg.n_devices
         assert len(partitions) == n
-        self.devices = DeviceRegistry(cfg, self.rng)
+        self.devices = (DeviceRegistry(cfg, self.rng) if devices is None
+                        else devices)
         self.server = TeasqServer(w_init, ServerConfig(
             n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
         self.channel = ChannelMeter()
@@ -505,6 +543,7 @@ class FLEngine:
         self._eval = jax.jit(self.task.eval_metric)
         self.history: List[LogEntry] = []
         self.stats = EngineStats(completed_per_device=np.zeros(n, np.int64))
+        self._treedef = jax.tree_util.tree_structure(w_init)
 
         if strategy is None:
             from repro.fl.protocols import make_strategy
@@ -512,14 +551,27 @@ class FLEngine:
         self.strategy = strategy
 
         self.scenario: Optional[ScenarioConfig] = cfg.scenario
-        self.scenario_rng = np.random.RandomState(
+        self.scenario_rng = (np.random.RandomState(
             (cfg.seed + 0x5CE7A710) % (2 ** 31))
-        if self.scenario is not None and self.scenario.tiers:
+            if scenario_rng is None else scenario_rng)
+        if (not self.shared_fleet and self.scenario is not None
+                and self.scenario.tiers):
             self.devices.apply_tiers(self.scenario.tiers)
 
         self.trainer = (CohortTrainer(self, cfg.cohort_size,
                                       cfg.cohort_channel_iters)
                         if cfg.cohort_size > 0 else SerialTrainer(self))
+
+        # resumable-loop state (checkpoint/resume lives here: ``run`` picks
+        # up exactly where a previous call stopped, and ``state_dict`` /
+        # ``load_state`` serialize it — see the checkpoint section below)
+        self._started = False
+        self._now = 0.0
+        self._seq = 0
+        self._events: Optional[List[Tuple]] = None     # heap scheduler
+        self._waiting: Optional[Any] = None
+        self._tail_logged = False
+        self._sync_now = 0.0
 
     # -- shared helpers ----------------------------------------------------
     def resolve_payload(self, payload: Any) -> Tuple[Any, int]:
@@ -551,27 +603,42 @@ class FLEngine:
         return self._run_async(time_budget, max_rounds, eval_every)
 
     # -- asynchronous event loop (Algs. 1-2) -------------------------------
+    def _resume(self) -> None:
+        """Drop the previous ``run`` call's trailing budget log so that
+        ``run(t)`` + ``run(T)`` produces exactly ``run(T)``'s history — the
+        invariant the checkpoint/resume bit-parity tests pin."""
+        if self._tail_logged:
+            self.history.pop()
+            self._tail_logged = False
+
+    def _push(self, t, kind, k, payload=None, h=0):
+        heapq.heappush(self._events, (t, self._seq, kind, k, payload, h))
+        self._seq += 1
+
     def _run_async(self, time_budget: float, max_rounds: int,
                    eval_every: int) -> List[LogEntry]:
         cfg = self.cfg
-        events: List[Tuple[float, int, str, int, Any, int]] = []
-        seq = 0
+        self._resume()
+        if not self._started:
+            self._events = []
+            self._waiting = []
+            for k in range(cfg.n_devices):
+                self._push(self.rng.uniform(0, 0.05), "request", k)
+            self._log(0.0)
+            self._started = True
 
-        def push(t, kind, k, payload=None, h=0):
-            nonlocal seq
-            heapq.heappush(events, (t, seq, kind, k, payload, h))
-            seq += 1
-
-        waiting: List[int] = []
-        for k in range(cfg.n_devices):
-            push(self.rng.uniform(0, 0.05), "request", k)
-
-        self._log(0.0)
-        now = 0.0
+        events, waiting, push = self._events, self._waiting, self._push
+        now = self._now
         while events:
-            now, _, kind, k, payload, h = heapq.heappop(events)
-            if now > time_budget or self.server.t >= max_rounds:
+            # peek: a stop leaves the boundary event queued, so a later
+            # ``run`` call (or a restored checkpoint) resumes exactly here;
+            # ``now`` still advances to the boundary time, which is what the
+            # pre-resume loop logged (it popped the event it then dropped)
+            t_next = events[0][0]
+            if t_next > time_budget or self.server.t >= max_rounds:
+                now = t_next
                 break
+            now, _, kind, k, payload, h = heapq.heappop(events)
             if kind == "request":
                 self._handle_request(now, k, push, waiting)
             elif kind == "failure":
@@ -579,7 +646,9 @@ class FLEngine:
             else:
                 self._handle_arrival(now, k, payload, h, eval_every, push,
                                      waiting)
+        self._now = now
         self._log(min(now, time_budget))
+        self._tail_logged = True
         return self.history
 
     def _drain_waiting(self, now, push, waiting) -> None:
@@ -671,8 +740,10 @@ class FLEngine:
     def _run_sync(self, time_budget: float, max_rounds: int,
                   eval_every: int) -> List[LogEntry]:
         cfg = self.cfg
-        now = 0.0
-        self._log(now)
+        now = self._sync_now
+        if not self._started:
+            self._log(now)
+            self._started = True
         per_round = min(cfg.devices_per_round, cfg.n_devices)
         identity = IdentityCodec()       # FedAvg/MOON ship dense f32
         while now < time_budget and self.server.t < max_rounds:
@@ -696,7 +767,242 @@ class FLEngine:
             now += max(latencies)        # straggler-bound synchronous round
             if self.server.t % eval_every == 0:
                 self._log(now)
+        self._sync_now = now
         return self.history
+
+    # -- checkpoint/resume -------------------------------------------------
+    # Full-sim-state serialization.  Everything below produces / consumes a
+    # plain nested structure of dicts, lists, scalars and numpy arrays —
+    # exactly what ``repro.checkpoint.io.save_blob`` msgpacks.  Model
+    # pytrees are stored as flat leaf lists and rebuilt against the engine's
+    # own treedef (captured from ``w_init`` at construction), so a restored
+    # engine must be built with the same (data, partitions, w_init, cfg).
+    # ``PendingTask`` objects can be referenced both from the deferred
+    # cohort buffer and from in-flight arrival events; a shared registry
+    # (``reg = (id->index, list)``) preserves that object identity across
+    # the roundtrip, which is what keeps resumed runs bit-identical.
+
+    def _pack_tree(self, tree: Any) -> List[np.ndarray]:
+        return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+    def _unpack_tree(self, leaves) -> Any:
+        return jax.tree_util.tree_unflatten(
+            self._treedef, [np.asarray(l) for l in leaves])
+
+    def _pack_payload(self, payload: Any, reg) -> List[Any]:
+        idx, pts = reg
+        if payload is None:
+            return ["none"]
+        if isinstance(payload, str):         # failure mode tag
+            return ["str", payload]
+        if isinstance(payload, PendingTask):
+            i = idx.get(id(payload))
+            if i is None:
+                i = len(pts)
+                idx[id(payload)] = i
+                pts.append(payload)
+            return ["pending", i]
+        w_up, n_k = payload                  # eager (w_local, n_k) tuple
+        return ["tree", self._pack_tree(w_up), int(n_k)]
+
+    def _unpack_payload(self, packed, pts: List[PendingTask]) -> Any:
+        tag = packed[0]
+        if tag == "none":
+            return None
+        if tag == "str":
+            return packed[1]
+        if tag == "pending":
+            return pts[int(packed[1])]
+        return self._unpack_tree(packed[1]), int(packed[2])
+
+    def _pack_pending(self, reg) -> List[Any]:
+        return [[int(p.k), int(p.version), int(p.t0), float(p.p_s),
+                 int(p.p_q), int(p.n_k), np.asarray(p.bidx),
+                 None if p.result is None
+                 else [self._pack_tree(p.result[0]), int(p.result[1])]]
+                for p in reg[1]]
+
+    def _unpack_pending(self, packed) -> List[PendingTask]:
+        pts = []
+        for k, version, t0, p_s, p_q, n_k, bidx, result in packed:
+            p = PendingTask(int(k), int(version), int(t0), float(p_s),
+                            int(p_q), int(n_k), np.asarray(bidx, np.int32))
+            if result is not None:
+                p.result = (self._unpack_tree(result[0]), int(result[1]))
+            pts.append(p)
+        return pts
+
+    def _core_state(self, reg) -> Dict[str, Any]:
+        """Per-task state: everything except the shared fleet pieces (RNG
+        streams, DeviceRegistry, event queue) — a fleet saves those once."""
+        srv, ch, st = self.server, self.channel, self.stats
+        core = {
+            "server": {"w": self._pack_tree(srv.w), "t": int(srv.t),
+                       "active": int(srv.active),
+                       "cache": [[self._pack_tree(w), int(h), int(n)]
+                                 for w, h, n in srv.cache]},
+            "strategy": self.strategy.state_dict(),
+            "prev_local": [[int(k), self._pack_tree(w)]
+                           for k, w in self.prev_local.items()],
+            "channel": {"bytes_up": int(ch.bytes_up),
+                        "bytes_down": int(ch.bytes_down),
+                        "max_up": int(ch.max_up),
+                        "max_down": int(ch.max_down),
+                        "tier_up": [[int(t), int(b)]
+                                    for t, b in ch.tier_up.items()],
+                        "tier_down": [[int(t), int(b)]
+                                      for t, b in ch.tier_down.items()]},
+            "history": [[float(e.time), int(e.round), float(e.accuracy),
+                         int(e.bytes_up), int(e.bytes_down),
+                         int(e.max_model_bytes_up),
+                         int(e.max_model_bytes_down)]
+                        for e in self.history],
+            "stats": {"dispatches": int(st.dispatches),
+                      "completions": int(st.completions),
+                      "dropouts": int(st.dropouts),
+                      "transient_failures": int(st.transient_failures),
+                      "redispatched": int(st.redispatched),
+                      "flushes": int(st.flushes),
+                      "flushed_tasks": int(st.flushed_tasks),
+                      "completed_per_device":
+                      np.asarray(st.completed_per_device)},
+            "tail_logged": bool(self._tail_logged),
+            "sync_now": float(self._sync_now),
+            "trainer": None,
+        }
+        tr = self.trainer
+        if isinstance(tr, CohortTrainer):
+            idx, pts = reg
+            refs = []
+            for p in tr.pending:
+                i = idx.get(id(p))
+                if i is None:
+                    i = len(pts)
+                    idx[id(p)] = i
+                    pts.append(p)
+                refs.append(i)
+            core["trainer"] = {
+                "perm_rng": _pack_rng(tr.perm_rng),
+                "pending": refs,
+                "versions": [self._pack_tree(v) for v in tr._versions],
+            }
+        return core
+
+    def _load_core(self, core, pts: List[PendingTask]) -> None:
+        srv = self.server
+        srv.w = self._unpack_tree(core["server"]["w"])
+        srv.t = int(core["server"]["t"])
+        srv.active = int(core["server"]["active"])
+        srv.cache = [(self._unpack_tree(w), int(h), int(n))
+                     for w, h, n in core["server"]["cache"]]
+        self.strategy.load_state(core["strategy"])
+        self.prev_local = {int(k): self._unpack_tree(w)
+                           for k, w in core["prev_local"]}
+        ch, c = self.channel, core["channel"]
+        ch.bytes_up = int(c["bytes_up"])
+        ch.bytes_down = int(c["bytes_down"])
+        ch.max_up = int(c["max_up"])
+        ch.max_down = int(c["max_down"])
+        ch.tier_up = {int(t): int(b) for t, b in c["tier_up"]}
+        ch.tier_down = {int(t): int(b) for t, b in c["tier_down"]}
+        self.history = [LogEntry(float(t), int(r), float(a), int(bu),
+                                 int(bd), int(mu), int(md))
+                        for t, r, a, bu, bd, mu, md in core["history"]]
+        s = core["stats"]
+        self.stats = EngineStats(
+            int(s["dispatches"]), int(s["completions"]), int(s["dropouts"]),
+            int(s["transient_failures"]), int(s["redispatched"]),
+            int(s["flushes"]), int(s["flushed_tasks"]),
+            completed_per_device=np.asarray(s["completed_per_device"],
+                                            np.int64))
+        self._tail_logged = bool(core["tail_logged"])
+        self._sync_now = float(core["sync_now"])
+        if core["trainer"] is not None:
+            tr = self.trainer
+            assert isinstance(tr, CohortTrainer), \
+                "checkpoint holds a deferred cohort buffer but this engine " \
+                "was built with cohort_size=0"
+            _load_rng(tr.perm_rng, core["trainer"]["perm_rng"])
+            tr.pending = [pts[int(i)] for i in core["trainer"]["pending"]]
+            tr._versions = [self._unpack_tree(v)
+                            for v in core["trainer"]["versions"]]
+            tr._version_ids = {id(v): i for i, v in enumerate(tr._versions)}
+            # the restored global model is a fresh object; re-intern it if
+            # it was one of the buffered versions so post-resume submits
+            # reuse the slot an uninterrupted run would
+            for i, v in enumerate(tr._versions):
+                if _trees_equal(v, srv.w):
+                    tr._version_ids[id(srv.w)] = i
+                    break
+
+    def _sched_state(self, reg) -> Dict[str, Any]:
+        events = None
+        if self._events is not None:
+            events = [[float(t), int(s), kind, int(k),
+                       self._pack_payload(p, reg), int(h)]
+                      for t, s, kind, k, p, h in self._events]
+        waiting = (None if self._waiting is None
+                   else [int(x) for x in list(self._waiting)])
+        return {"events": events, "waiting": waiting}
+
+    def _load_sched(self, st, pts: List[PendingTask]) -> None:
+        ev = st["events"]
+        self._events = None if ev is None else [
+            (float(t), int(s), str(kind), int(k),
+             self._unpack_payload(p, pts), int(h))
+            for t, s, kind, k, p, h in ev]
+        w = st["waiting"]
+        self._waiting = None if w is None else [int(x) for x in w]
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Serializable full simulation state — server cache, codec-policy
+        EWMAs, the DeviceRegistry, the event queue / EventTable, every RNG
+        stream, history/stats/byte meters, and any deferred cohort buffer.
+        Plain dicts/lists/scalars/ndarrays throughout: feed it to
+        ``repro.checkpoint.io.save_blob``.  Restore with :meth:`load_state`
+        on a freshly constructed engine over the same (data, partitions,
+        w_init, cfg); a resumed ``run`` is bit-identical to an
+        uninterrupted one (tests/test_fleet.py pins this)."""
+        reg = ({}, [])
+        dv = self.devices
+        state = {
+            "version": 1,
+            "rng": _pack_rng(self.rng),
+            "scenario_rng": _pack_rng(self.scenario_rng),
+            "devices": {"down_rates": np.asarray(dv.down_rates),
+                        "up_rates": np.asarray(dv.up_rates),
+                        "a_k": np.asarray(dv.a_k),
+                        "phi_k": np.asarray(dv.phi_k),
+                        "alive": np.asarray(dv.alive),
+                        "tier": np.asarray(dv.tier)},
+            "started": bool(self._started),
+            "now": float(self._now),
+            "seq": int(self._seq),
+            "sched": self._sched_state(reg),
+            "core": self._core_state(reg),
+        }
+        state["pending"] = self._pack_pending(reg)
+        return state
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        if int(state["version"]) != 1:
+            raise ValueError(
+                f"unknown engine checkpoint version {state['version']!r}")
+        _load_rng(self.rng, state["rng"])
+        _load_rng(self.scenario_rng, state["scenario_rng"])
+        dv, d = self.devices, state["devices"]
+        dv.down_rates[:] = np.asarray(d["down_rates"])
+        dv.up_rates[:] = np.asarray(d["up_rates"])
+        dv.a_k[:] = np.asarray(d["a_k"])
+        dv.phi_k[:] = np.asarray(d["phi_k"])
+        dv.alive[:] = np.asarray(d["alive"], bool)
+        dv.tier[:] = np.asarray(d["tier"])
+        self._started = bool(state["started"])
+        self._now = float(state["now"])
+        self._seq = int(state["seq"])
+        pts = self._unpack_pending(state["pending"])
+        self._load_core(state["core"], pts)
+        self._load_sched(state["sched"], pts)
 
 
 # ----------------------------------------------------------------------
@@ -746,25 +1052,28 @@ class BatchedEngine(FLEngine):
                    eval_every: int) -> List[LogEntry]:
         table = self.devices.event_table()
         n = self.cfg.n_devices
-        if n:
-            # one vectorized draw == the heap path's n scalar draws
-            table.time[:] = self.rng.uniform(0.0, 0.05, n)
-            table.seq[:] = np.arange(n)
-            table.kind[:] = KIND_IDS["request"]
-        seq = n
-        waiting = _FifoWaiting()
+        self._resume()
+        if not self._started:
+            if n:
+                # one vectorized draw == the heap path's n scalar draws
+                table.time[:] = self.rng.uniform(0.0, 0.05, n)
+                table.seq[:] = np.arange(n)
+                table.kind[:] = KIND_IDS["request"]
+            self._seq = n
+            self._waiting = _FifoWaiting()
+            self._log(0.0)
+            self._started = True
+        waiting = self._waiting
         spawned: List[Tuple[float, int, str, int, Any, int]] = []
         horizon = (np.inf, np.inf)   # (time, seq) of the batch's last event
 
         def push(t, kind, k, payload=None, h=0):
-            nonlocal seq
-            table.put(k, t, seq, kind, payload, h)
-            if (t, seq) < horizon:
-                heapq.heappush(spawned, (t, seq, kind, k, payload, h))
-            seq += 1
+            table.put(k, t, self._seq, kind, payload, h)
+            if (t, self._seq) < horizon:
+                heapq.heappush(spawned, (t, self._seq, kind, k, payload, h))
+            self._seq += 1
 
-        self._log(0.0)
-        now = 0.0
+        now = self._now
         stop = False
         while not stop:
             sel = table.select_batch(self.SELECT_K)
@@ -786,10 +1095,13 @@ class BatchedEngine(FLEngine):
                     ev = batch[i]
                     i += 1
                 now, _, kind, k, payload, h = ev
-                table.clear(k)
                 if now > time_budget or self.server.t >= max_rounds:
+                    # stop BEFORE clearing: the boundary event stays in the
+                    # table, so a later ``run`` call / restored checkpoint
+                    # resumes exactly here (the heap path peeks instead)
                     stop = True
                     break
+                table.clear(k)
                 if kind == "request":
                     self._handle_request(now, k, push, waiting)
                 elif kind == "failure":
@@ -799,7 +1111,9 @@ class BatchedEngine(FLEngine):
                                          push, waiting)
             spawned.clear()   # leftovers (on stop) still live in `table`
             horizon = (np.inf, np.inf)
+        self._now = now
         self._log(min(now, time_budget))
+        self._tail_logged = True
         return self.history
 
     def _handle_arrival(self, now, k, payload, h, eval_every, push,
@@ -817,6 +1131,42 @@ class BatchedEngine(FLEngine):
         if self.devices.alive[k]:
             push(now, "request", k)
         self._drain_waiting(now, push, waiting)
+
+    # -- checkpoint/resume: EventTable instead of the heap -----------------
+    def _sched_state(self, reg) -> Dict[str, Any]:
+        tab = self.devices.events
+        table = None
+        if tab is not None:
+            live = np.flatnonzero(tab.time < np.inf).tolist()
+            table = {"slots": [[int(k), float(tab.time[k]), int(tab.seq[k]),
+                                int(tab.kind[k]), int(tab.h[k]),
+                                int(tab.task[k]),
+                                self._pack_payload(tab.payload[k], reg)]
+                               for k in live]}
+        waiting = (None if self._waiting is None
+                   else [int(x) for x in
+                         self._waiting._items[self._waiting._head:]])
+        return {"table": table, "waiting": waiting}
+
+    def _load_sched(self, st, pts: List[PendingTask]) -> None:
+        if st["table"] is not None:
+            tab = self.devices.event_table()
+            tab.time[:] = np.inf
+            tab.payload = [None] * len(tab.time)
+            for k, t, seq, kind, h, task, p in st["table"]["slots"]:
+                k = int(k)
+                tab.time[k] = float(t)
+                tab.seq[k] = int(seq)
+                tab.kind[k] = int(kind)
+                tab.h[k] = int(h)
+                tab.task[k] = int(task)
+                tab.payload[k] = self._unpack_payload(p, pts)
+        if st["waiting"] is None:
+            self._waiting = None
+        else:
+            w = _FifoWaiting()
+            w._items = [int(x) for x in st["waiting"]]
+            self._waiting = w
 
 
 # scheduler registry: SimConfig.scheduler -> engine class (the same

@@ -141,6 +141,14 @@ class CodecPolicy(abc.ABC):
             for i, s in zip(ids.tolist(), st.tolist()):
                 est[i] = (1.0 - b) * est[i] + b * s
 
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Checkpointable policy state: the per-device staleness EWMAs (all
+        the mutable state any registered policy keeps)."""
+        return {"staleness_est": np.asarray(self.staleness_est)}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        self.staleness_est[:] = np.asarray(state["staleness_est"])
+
     def context(self, t: int, device_id: Optional[int]) -> DispatchContext:
         known = self._known(device_id)
         tier = int(self.tier_of[device_id]) if known else 0

@@ -113,6 +113,18 @@ class ProtocolStrategy(abc.ABC):
         raise NotImplementedError(
             f"{self.method} does not run the synchronous loop")
 
+    # -- checkpoint/resume ----------------------------------------------
+    # Registered strategies are stateless beyond their bound codec policy
+    # (whose per-device staleness EWMAs both engines feed), so the engine
+    # checkpoints a strategy by delegating here; a bespoke stateful
+    # protocol overrides both hooks.
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"policy": self.policy.state_dict()}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.policy.load_state(state["policy"])
+
 
 # -- TEA-Fed family: cached staleness-weighted aggregation (Alg. 2) -------
 class TeaStrategy(ProtocolStrategy):

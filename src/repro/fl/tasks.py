@@ -207,3 +207,88 @@ register_task(FLTask(
     forward=lm_forward,
     features=None,            # no contrastive head: MOON is CNN/MLP-only
 ))
+
+
+# ----------------------------------------------------------------------
+# moe_lm / ssm_lm — the Mixture-of-Experts and SSM-only (Mamba2/SSD)
+# families of the transformer stack, registered so a multi-task fleet
+# (repro.fl.fleet) is genuinely heterogeneous: the same next-token
+# objective and copy-structured token stream as transformer_lm, but the
+# layer bodies route through repro/models/moe.py (Switch-style top-k
+# routing + load-balance aux loss; the dense reference path on CPU) and
+# repro/models/ssm.py (chunked SSD scan — ``ssm_chunk`` must divide
+# LM_SEQ_LEN).  One FLTask construction each: no protocol, codec, or
+# engine code knows these families exist.
+# ----------------------------------------------------------------------
+def _lm_family_fns(cfg: ModelConfig):
+    """The transformer_lm task functions, closed over an arbitrary
+    ``ModelConfig`` — each family gets its own stable function objects
+    (FLTask attributes are static jit args, so sharing would be fine, but
+    distinct objects keep per-task jit caches independent)."""
+
+    def init_params(key):
+        return tfm.init_model(key, cfg)
+
+    def forward(params, tokens):
+        logits, _ = tfm.forward(params, {"tokens": tokens}, cfg)
+        return logits
+
+    def loss(params, batch):
+        l, _ = tfm.lm_loss(params, {"tokens": batch["images"]}, cfg)
+        return l
+
+    def eval_metric(params, tokens, labels):
+        del labels
+        logits = forward(params, tokens)
+        return (logits[:, :-1].argmax(-1) == tokens[:, 1:]).mean()
+
+    def cohort_loss(params, tokens, labels):
+        del labels
+        per_device = jax.vmap(
+            lambda p, t: tfm.lm_loss(p, {"tokens": t}, cfg)[0])(params,
+                                                               tokens)
+        return per_device.mean()
+
+    return init_params, loss, eval_metric, cohort_loss, forward
+
+
+_MOE_LM_CFG = ModelConfig(
+    name="fl-moe-lm", family="moe",
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+    tie_embeddings=True, n_experts=4, moe_top_k=2)
+
+_SSM_LM_CFG = ModelConfig(
+    name="fl-ssm-lm", family="ssm",
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+    tie_embeddings=True, ssm_state=8, ssm_head_dim=16, ssm_expand=2,
+    ssm_conv_width=4, ssm_chunk=8)   # chunk 8 divides LM_SEQ_LEN=16
+
+assert _MOE_LM_CFG.is_moe and _SSM_LM_CFG.is_ssm_only
+assert LM_SEQ_LEN % _SSM_LM_CFG.ssm_chunk == 0
+
+(_moe_init, _moe_loss, _moe_acc, _moe_cohort, _moe_fwd) = \
+    _lm_family_fns(_MOE_LM_CFG)
+(_ssm_init, _ssm_loss, _ssm_acc, _ssm_cohort, _ssm_fwd) = \
+    _lm_family_fns(_SSM_LM_CFG)
+
+register_task(FLTask(
+    name="moe_lm",
+    init_params=_moe_init,
+    loss=_moe_loss,
+    eval_metric=_moe_acc,
+    cohort_loss=_moe_cohort,
+    make_data=make_lm_data,
+    forward=_moe_fwd,
+    features=None,
+))
+
+register_task(FLTask(
+    name="ssm_lm",
+    init_params=_ssm_init,
+    loss=_ssm_loss,
+    eval_metric=_ssm_acc,
+    cohort_loss=_ssm_cohort,
+    make_data=make_lm_data,
+    forward=_ssm_fwd,
+    features=None,
+))
