@@ -14,7 +14,13 @@
 #    (tests/test_fleet.py — ASSIGNERS unit checks plus a 4-family
 #    heterogeneous shared-fleet run, so every build exercises the
 #    repro.fl.fleet layer; the bit-parity and checkpoint/resume tests
-#    stay tier-1-only) — <60 s total
+#    stay tier-1-only), and the fused-kernel smoke slice (the `-m smoke`
+#    marked grids in tests/test_kernels.py and tests/test_fused_pack.py:
+#    the fused sparsify+quantize+pack emitter runs as interpret-mode
+#    Pallas, so CPU CI executes the exact kernel body that lowers to TPU
+#    pallas_call and pins it byte-identical to the host oracle stream;
+#    the hypothesis property suite in tests/test_fused_pack_properties.py
+#    and the pinned-history fused run stay tier-1-only) — <60 s total
 # 3. the docs check: tests/test_docs.py parses the fenced commands in
 #    README.md and docs/*.md and verifies every referenced file and flag
 #    exists (so the documentation front door cannot silently rot)

@@ -226,10 +226,23 @@ class PackedBitstreamCodec(Codec):
 
     holds exactly.  Selection and quantization reuse ``compress_tensor``
     verbatim, making the decode bit-identical to :class:`DenseRefCodec` for
-    the same ``(p_s, p_q, rng)``.  Full layout spec: docs/WIRE_FORMAT.md."""
+    the same ``(p_s, p_q, rng)``.  Full layout spec: docs/WIRE_FORMAT.md.
+
+    **Fused fast path**: with ``fused=True`` (the default), deterministic
+    encodes (``rng is None``) go through the one-pass fused emitter
+    ``repro.kernels.ops.fused_wire_encode`` — the ``fused_pack`` Pallas
+    kernel on TPU (REPRO_PALLAS_NATIVE=1), its vectorized numpy twin on
+    host — which writes the packed words directly at dense-codec speed.
+    Stochastic (rng) encodes always take the multi-pass ``compress_tensor``
+    pipeline: engines pass the shared sim RNG, so protocol histories keep
+    the exact legacy draw order regardless of ``fused``.  ``fused=False``
+    keeps the host pipeline as the parity oracle (the way the ``heap``
+    scheduler anchors ``batched``); tests/test_fused_pack pins
+    fused-vs-oracle stream bit-equality."""
 
     p_s: float = 1.0
     p_q: int = FLOAT_BITS
+    fused: bool = True
 
     name: ClassVar[str] = "packed"
 
@@ -240,13 +253,20 @@ class PackedBitstreamCodec(Codec):
     # -- encode -----------------------------------------------------------
     def encode(self, tree, *, rng=None) -> Wire:
         leaves, treedef = jax.tree.flatten(tree)
-        segments: List[Tuple[np.ndarray, int]] = []
-        shapes = []
-        for x in leaves:
-            c = compress_tensor(np.asarray(x), self.p_s, self.p_q, rng)
-            segments.extend(self._tensor_segments(c))
-            shapes.append(c["shape"])
-        payload = pack_segments(segments)
+        shapes = [np.shape(x) for x in leaves]
+        if self.fused and rng is None:
+            # imported at call time: repro.kernels.ops pulls in the fused
+            # kernel, which needs repro.core.compression — a top-level
+            # import here would close that cycle when repro.kernels loads
+            # first
+            from repro.kernels.ops import fused_wire_encode
+            payload = fused_wire_encode(leaves, self.p_s, self.p_q)
+        else:
+            segments: List[Tuple[np.ndarray, int]] = []
+            for x in leaves:
+                c = compress_tensor(np.asarray(x), self.p_s, self.p_q, rng)
+                segments.extend(self._tensor_segments(c))
+            payload = pack_segments(segments)
         return Wire(self.name, payload, len(payload), meta=(treedef, shapes))
 
     @staticmethod

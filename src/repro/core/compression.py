@@ -150,7 +150,20 @@ def compress_tensor(x: np.ndarray, p_s: float, p_q: int,
     n = flat.size
     k = topk_count(n, p_s)
     if k < n:
-        idx = np.argpartition(np.abs(flat), n - k)[n - k:]
+        ax = np.abs(flat)
+        idx = np.argpartition(ax, n - k)[n - k:]
+        # argpartition's choice among magnitudes tied at the k-th place is
+        # arbitrary; the wire format pins the canonical rule "boundary ties
+        # keep the smallest flat indices" (WIRE_FORMAT.md) so the fused
+        # kernel/host emitters in repro.kernels.fused_pack agree with this
+        # oracle bit-for-bit.  Only the ambiguous slots are rewritten: when
+        # every tied magnitude is already selected (the common case), idx —
+        # and hence the stochastic-rounding RNG draw order — is untouched.
+        kth_sel = ax[idx] == ax[idx].min()
+        canon = np.flatnonzero(ax == ax[idx].min())
+        if canon.size > int(np.count_nonzero(kth_sel)):
+            idx = idx.copy()
+            idx[kth_sel] = canon[:int(np.count_nonzero(kth_sel))]
     else:
         idx = np.arange(n)
     values = flat[idx]

@@ -11,15 +11,23 @@ padding), so the emitted byte count matches the analytic size model
     len(stream)  = ceil(sum_over_tensors(bits) / 8)
 
 ``field_to_bits`` / ``bits_to_field`` are pure ``jnp`` shift/mask
-arithmetic — elementwise VPU work that XLA lowers efficiently on TPU (the
-Pallas block variant of the *upstream* sparsify+quantize stage lives in
-``repro.kernels.topk_quant``; packing itself has no block-local structure
-worth a hand-written kernel).  The host-side helpers ``pack_segments`` /
-``BitReader`` apply the SAME shift/mask formula in plain numpy — per-segment
-jit dispatch + host<->device transfers cost ~4 ms each on CPU, which would
-dominate the serial simulator's per-round encode — and materialize bytes
-with ``np.packbits`` / ``np.unpackbits``.  tests/test_compression_invariants
-pins host-path == kernel-path bit equality.
+arithmetic — elementwise VPU work that XLA lowers efficiently on TPU.  The
+full one-pass TPU emitter (sparsify + quantize + shift/OR word packing fused
+into a single Pallas kernel) lives in ``repro.kernels.fused_pack`` and is
+surfaced through ``repro.kernels.ops.fused_wire_encode``.
+
+The host-side helpers ``pack_segments`` / ``BitReader`` are the production
+CPU path (per-segment jit dispatch + host<->device transfers cost ~4 ms each
+on CPU, which would dominate the serial simulator's per-round encode).  They
+work at WORD level: each ``width``-bit field spans at most two big-endian
+uint32 stream words, so packing is a vectorized shift/OR scatter into words
+(via ``np.add.at`` accumulation — contributions to one word never overlap
+in bits, so the integer sum IS the bitwise OR) and reading is one 64-bit
+gather + shift + mask per field.  No per-bit uint8 expansion
+(``np.packbits`` / ``np.unpackbits``) anywhere — that costs 8x the memory
+traffic of the payload and used to dominate packed-codec throughput.
+tests/test_compression_invariants pins host-path == kernel-path bit
+equality, and tests/test_fused_pack pins both against the fused emitter.
 
 The normative stream layout these kernels serialize (field order,
 offset-binary values, delta-coded indices, bit-level tensor concatenation)
@@ -33,6 +41,8 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+WORD = 32                     # stream word size in bits (big-endian uint32)
 
 
 @functools.partial(jax.jit, static_argnames=("width",))
@@ -54,35 +64,83 @@ def bits_to_field(bits: jax.Array, width: int) -> jax.Array:
 Segment = Tuple[np.ndarray, int]          # (uint32 values, bit width)
 
 
-def _np_field_to_bits(vals: np.ndarray, width: int) -> np.ndarray:
-    """Host-side twin of ``field_to_bits`` (identical formula, no dispatch)."""
-    shifts = np.arange(width - 1, -1, -1, dtype=np.uint32)
-    return ((vals[:, None] >> shifts) & np.uint32(1)).astype(np.uint8).reshape(-1)
+def words_to_bytes(words: np.ndarray, total_bits: int) -> bytes:
+    """Serialize big-endian uint32 stream words -> ``ceil(total_bits/8)``
+    bytes.  Bits past ``total_bits`` must already be zero (they become the
+    stream's zero-filled trailing partial byte)."""
+    return np.ascontiguousarray(words, np.uint32).astype(">u4").tobytes()[
+        :(total_bits + 7) // 8]
+
+
+def _scatter_segment(acc: np.ndarray, v: np.ndarray, width: int,
+                     pos: int) -> None:
+    """Accumulate one fixed-width segment into a uint64 window accumulator.
+
+    Field ``i`` occupies ``width`` bits starting at absolute stream bit
+    ``off = pos + i * width`` (MSB-first).  A field starting in stream word
+    ``off >> 5`` always ends within the 64-bit window covering that word
+    and the next (``width <= 32``), so the whole field is ONE uint64
+    contribution ``v << (64 - off%32 - width)`` to ``acc[off >> 5]`` —
+    a single ``np.add.at`` per segment, no straddle case split.  Exact
+    because fields are bit-disjoint in the stream: within a window the high
+    and low 32-bit halves each sum without carries, so integer add IS
+    bitwise OR.  ``width`` is a scalar per segment, keeping the shift
+    arithmetic in a handful of flat int64/uint64 temporaries.
+    """
+    off = pos + np.arange(v.size, dtype=np.int64) * width
+    sh = (np.int64(2 * WORD - width) - (off & 31)).astype(np.uint64)
+    np.add.at(acc, off >> 5, v.astype(np.uint64) << sh)
+
+
+def _fold_windows(acc: np.ndarray, total_bits: int) -> np.ndarray:
+    """Collapse the uint64 window accumulator to big-endian uint32 words:
+    stream word ``j`` = high half of window ``j`` OR low half of window
+    ``j - 1`` (again bit-disjoint, so ``+`` is OR)."""
+    nw = (total_bits + WORD - 1) // WORD
+    words = (acc >> np.uint64(WORD)).astype(np.uint32)[:nw]
+    words[1:] += acc.astype(np.uint32)[:nw - 1]
+    return words
 
 
 def pack_segments(segments: Sequence[Segment]) -> bytes:
     """Concatenate fixed-width fields into one bit-level stream.
 
-    The final partial byte (if any) is zero-padded on the right by
-    ``np.packbits``, giving ``ceil(total_bits / 8)`` bytes.
+    The final partial byte (if any) is zero-padded on the right, giving
+    ``ceil(total_bits / 8)`` bytes.
     """
-    chunks: List[np.ndarray] = []
-    for vals, width in segments:
-        v = np.ascontiguousarray(vals, dtype=np.uint32).reshape(-1)
+    parts: List[Tuple[np.ndarray, int, int]] = []
+    pos = 0
+    for v, width in segments:
+        v = np.ascontiguousarray(v, dtype=np.uint32).reshape(-1)
         if v.size == 0:
             continue
         assert 1 <= width <= 32
-        chunks.append(_np_field_to_bits(v, width))
-    if not chunks:
+        parts.append((v, width, pos))
+        pos += v.size * width
+    if not parts:
         return b""
-    return np.packbits(np.concatenate(chunks)).tobytes()
+    nw = (pos + WORD - 1) // WORD
+    acc = np.zeros(nw, np.uint64)       # one 64-bit window per stream word
+    for v, width, start in parts:
+        _scatter_segment(acc, v, width, start)
+    return words_to_bytes(_fold_windows(acc, pos), pos)
 
 
 class BitReader:
-    """Sequential fixed-width field reader over a packed byte stream."""
+    """Sequential fixed-width field reader over a packed byte stream.
+
+    Word-level: the payload is viewed as big-endian uint32 words; each field
+    is extracted from the (at most two) words it spans with one vectorized
+    64-bit shift — ``(w[i] << 32 | w[i+1]) >> (64 - offset%32 - width)``.
+    All arithmetic stays in uint64 (mixing uint64 with signed ints would
+    silently promote to float64 in numpy).
+    """
 
     def __init__(self, payload: bytes):
-        self._bits = np.unpackbits(np.frombuffer(payload, dtype=np.uint8))
+        pad = (-len(payload)) % 4 + 4     # +1 word so words[i+1] always exists
+        self._words = np.frombuffer(payload + b"\x00" * pad,
+                                    dtype=">u4").astype(np.uint64)
+        self._nbits = len(payload) * 8
         self._pos = 0
 
     def read(self, count: int, width: int) -> np.ndarray:
@@ -90,16 +148,18 @@ class BitReader:
         if count == 0:
             return np.zeros(0, np.uint32)
         nbits = count * width
-        seg = self._bits[self._pos:self._pos + nbits]
-        if seg.size != nbits:
+        if self._pos + nbits > self._nbits:
             raise ValueError(
                 f"bitstream underrun: wanted {nbits} bits at {self._pos}, "
-                f"have {self._bits.size - self._pos}")
+                f"have {self._nbits - self._pos}")
+        off = np.uint64(self._pos) \
+            + np.arange(count, dtype=np.uint64) * np.uint64(width)
+        wi = (off >> np.uint64(5)).astype(np.int64)
+        comb = (self._words[wi] << np.uint64(32)) | self._words[wi + 1]
+        shift = np.uint64(64) - (off & np.uint64(31)) - np.uint64(width)
+        mask = np.uint64((1 << width) - 1)
         self._pos += nbits
-        # host-side twin of bits_to_field (same formula, no jit dispatch)
-        b = seg.reshape(count, width).astype(np.uint32)
-        weights = np.uint32(1) << np.arange(width - 1, -1, -1, dtype=np.uint32)
-        return (b * weights).sum(axis=1, dtype=np.uint32)
+        return ((comb >> shift) & mask).astype(np.uint32)
 
     @property
     def bits_read(self) -> int:

@@ -8,16 +8,44 @@ kernels execute their bodies in Python (bit-accurate) while targeting TPU
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import fused_pack, ref
 from repro.kernels.ssd_scan import ssd_chunked_pallas
 from repro.kernels.topk_quant import DEFAULT_BLOCK, dequant, topk_quant
 
 _NATIVE = bool(int(os.environ.get("REPRO_PALLAS_NATIVE", "0")))
+
+
+def fused_wire_encode(tree: Any, p_s: float, p_q: int,
+                      backend: Optional[str] = None) -> bytes:
+    """One-pass packed wire encode of a pytree (Alg. 3 serialization).
+
+    Bit-identical to ``PackedBitstreamCodec``'s host oracle pipeline with
+    deterministic rounding; ``len(result) == expected_pytree_wire_bytes``.
+
+    ``backend``:
+      * ``None`` — auto: the native Pallas kernel when REPRO_PALLAS_NATIVE=1
+        (real TPU), otherwise the vectorized numpy twin (on CPU the twin is
+        the fast path — per-leaf pallas_call dispatch costs ~ms on host,
+        the same trade ``bitpack`` makes for its jnp kernels);
+      * ``"host"`` — force the numpy twin;
+      * ``"interpret"`` — force the Pallas kernel under the interpreter
+        (bit-accurate kernel body on CPU; what CI exercises);
+      * ``"native"`` — force real TPU lowering.
+    """
+    if backend is None:
+        backend = "native" if _NATIVE else "host"
+    leaves = jax.tree.leaves(tree)
+    if backend == "host":
+        return fused_pack.pack_leaves_host(leaves, p_s, p_q)
+    if backend not in ("interpret", "native"):
+        raise ValueError(f"unknown fused_wire_encode backend {backend!r}")
+    return fused_pack.pack_leaves_pallas(leaves, p_s, p_q,
+                                         interpret=backend == "interpret")
 
 
 def compress_roundtrip(x: jax.Array, p_s: float = 0.25, bits: int = 8,

@@ -11,7 +11,8 @@ pytestmark = pytest.mark.smoke
 def test_codec_throughput_smoke_grid():
     rows = run(reps=1, grid_ps=(0.25,), grid_pq=(8,), out_path=None)
     assert {r["codec"] for r in rows} == {"dense", "identity", "packed",
-                                          "threshold"}
+                                          "threshold", "packed_fused",
+                                          "packed_host"}
     for r in rows:
         assert r["encode_mbps"] > 0
         # passthrough decodes (identity/threshold) report null, not a
@@ -23,6 +24,22 @@ def test_codec_throughput_smoke_grid():
         assert r["wire_bytes"] == r["expected_bytes"], r
         if r["resolved"] != "identity":
             assert r["wire_bytes"] < r["dense_bytes"]
+    # the fused variant proved stream equality during the bench itself
+    fused = next(r for r in rows if r["codec"] == "packed_fused")
+    assert fused["bit_identical_to_host"] is True
+
+
+def test_codec_throughput_merges_instead_of_clobbering(tmp_path):
+    """A partial re-run must update its (codec, p_s, p_q) rows in place and
+    keep every other recorded row (the engine_scale merge discipline)."""
+    out = tmp_path / "codec_throughput.json"
+    run(reps=1, grid_ps=(0.25,), grid_pq=(8,), codecs=("identity",),
+        out_path=str(out))
+    run(reps=1, grid_ps=(0.25,), grid_pq=(8,), codecs=("packed_fused",),
+        out_path=str(out))
+    import json
+    rows = json.loads(out.read_text())
+    assert {r["codec"] for r in rows} == {"identity", "packed_fused"}
 
 
 def test_codec_throughput_prices_identity_dense():

@@ -1,0 +1,141 @@
+"""Fused one-pass wire emitter (repro.kernels.fused_pack) bit-equality pins.
+
+Three executions of Alg. 3's packed serialization must produce the SAME byte
+string: the multi-pass host oracle (``PackedBitstreamCodec(fused=False)``,
+built on ``compress_tensor`` + ``pack_segments``), the vectorized numpy twin
+(``pack_leaves_host`` — the production CPU path behind ``fused=True``), and
+the Pallas kernel run under the interpreter (``pack_leaves_pallas`` — the
+body that lowers to TPU ``pallas_call``).  The always-running deterministic
+grid lives here and in tests/test_kernels.py; the hypothesis suite in
+tests/test_fused_pack_properties.py additionally drives tie-heavy and
+adversarial shapes.  On top of stream
+equality, the fused-codec teasq history must stay byte-identical to the
+frozen fixture tests/data/pinned_histories.json on both backends — the
+end-to-end guarantee that the fast path cannot perturb protocol runs.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import PINNED_PATH, TINY_SETUP, assert_histories_equal, run_method
+
+from repro.core.codecs import PackedBitstreamCodec, resolve_codec
+from repro.core.compression import expected_pytree_wire_bytes
+from repro.kernels.bitpack import pack_segments
+from repro.kernels.fused_pack import (concat_bitstreams, pack_leaves_host,
+                                      pack_leaves_pallas)
+from repro.kernels.ops import fused_wire_encode
+
+GRID_PS = (0.01, 0.1, 0.25, 1.0)          # 1.0 = dense fallback (k == n)
+GRID_PQ = (2, 8, 32)                      # 32 = uncompressed values (raw f32)
+
+
+def _tree(seed: int, n: int = 1500):
+    rng = np.random.RandomState(seed)
+    return {"w": rng.randn(n // 30, 30).astype(np.float32),
+            "b": rng.randn(max(1, n // 100)).astype(np.float32),
+            "s": np.float32(rng.randn())}
+
+
+# ----------------------------------------------------------------------
+# always-run deterministic grid (smoke: CI's fused slice, with the kernel
+# half of the grid in tests/test_kernels.py)
+# ----------------------------------------------------------------------
+@pytest.mark.smoke
+@pytest.mark.parametrize("p_s", GRID_PS)
+@pytest.mark.parametrize("p_q", GRID_PQ)
+def test_fused_paths_match_oracle_bitwise(p_s, p_q):
+    """host twin == interpret-mode Pallas kernel == multi-pass oracle, and
+    the length equals the analytic price at every sparse grid point."""
+    tree = _tree(seed=int(p_s * 100) + p_q)
+    leaves = jax.tree.leaves(tree)
+    oracle = PackedBitstreamCodec(p_s, p_q, fused=False).encode(tree).payload
+    assert pack_leaves_host(leaves, p_s, p_q) == oracle
+    assert pack_leaves_pallas(leaves, p_s, p_q, interpret=True) == oracle
+    if p_s < 1.0 or p_q < 32:             # dense point: price excludes scales
+        assert len(oracle) == expected_pytree_wire_bytes(tree, p_s, p_q)
+
+
+@pytest.mark.smoke
+def test_fused_codec_auto_select_and_oracle_fallback():
+    """fused=True encodes deterministically via the fused emitter, falls back
+    to the oracle pipeline under stochastic rounding (rng is not None), and
+    both decode to the oracle's trees."""
+    tree = _tree(seed=5)
+    fused = PackedBitstreamCodec(0.1, 8)            # fused defaults True
+    oracle = PackedBitstreamCodec(0.1, 8, fused=False)
+    assert fused.fused and resolve_codec("packed", 0.1, 8).fused
+    wf, wo = fused.encode(tree), oracle.encode(tree)
+    assert wf.payload == wo.payload
+    for a, b in zip(jax.tree.leaves(fused.decode(wf)),
+                    jax.tree.leaves(oracle.decode(wo))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # stochastic path: identical draws -> identical bytes regardless of fused
+    sf = fused.encode(tree, rng=np.random.RandomState(3)).payload
+    so = oracle.encode(tree, rng=np.random.RandomState(3)).payload
+    assert sf == so
+
+
+@pytest.mark.smoke
+def test_fused_ties_break_to_smallest_index():
+    """Duplicate magnitudes straddling the k-th place: every path must pick
+    the canonical smallest-index survivors (WIRE_FORMAT.md, Determinism)."""
+    rng = np.random.RandomState(11)
+    vals = rng.choice([0.0, 0.25, -0.25, 0.5, -0.5], size=700)
+    tree = [vals.astype(np.float32).reshape(35, 20)]
+    for p_s in (0.05, 0.3, 0.6):
+        oracle = PackedBitstreamCodec(p_s, 4, fused=False).encode(tree).payload
+        assert pack_leaves_host(tree, p_s, 4) == oracle
+        assert pack_leaves_pallas(tree, p_s, 4, interpret=True) == oracle
+
+
+@pytest.mark.smoke
+def test_fused_wire_encode_backends_agree():
+    tree = _tree(seed=9)
+    host = fused_wire_encode(tree, 0.1, 8, backend="host")
+    interp = fused_wire_encode(tree, 0.1, 8, backend="interpret")
+    auto = fused_wire_encode(tree, 0.1, 8)          # host on this container
+    assert host == interp == auto
+    with pytest.raises(ValueError):
+        fused_wire_encode(tree, 0.1, 8, backend="gpu")
+
+
+@pytest.mark.smoke
+def test_concat_bitstreams_odd_and_empty_parts():
+    """Bit-level joining at arbitrary (non-byte, non-word) offsets, with
+    empty slices interleaved, equals one global pack_segments pass."""
+    rng = np.random.RandomState(0)
+    segs, parts = [], []
+    for width, count in ((3, 5), (32, 2), (1, 13), (0, 0), (17, 4), (7, 1)):
+        v = rng.randint(0, 2 ** max(width, 1), size=count).astype(np.uint32)
+        if count:
+            segs.append((v, width))
+        parts.append((pack_segments([(v, width)] if count else []),
+                      width * count))
+    assert concat_bitstreams(parts) == pack_segments(segs)
+    assert concat_bitstreams([]) == b""
+
+
+# ----------------------------------------------------------------------
+# end-to-end: fused codec cannot perturb protocol histories
+# ----------------------------------------------------------------------
+def test_fused_codec_history_pinned_both_backends(tiny_setup):
+    """teasq with the fused packed codec, on BOTH backends, must replay the
+    frozen pre-fused fixture byte-for-byte: engines pass the sim RNG into
+    encode (stochastic QSGD), so the codec takes the oracle pipeline and the
+    LogEntry history — times, rounds, accuracies, byte counters — is
+    bit-identical to the dense-codec fixture history."""
+    with open(PINNED_PATH) as f:
+        pinned = json.load(f)
+    assert pinned["setup"] == TINY_SETUP
+    data, parts, w0 = tiny_setup
+    kw = dict(pinned["run_kw"], **pinned["runs"]["teasq"])
+    for backend in ("engine", "legacy"):
+        hist = run_method("teasq", data, parts, w0, backend=backend,
+                          codec="packed", **kw)
+        got = [dataclasses.asdict(h) for h in hist]
+        assert got == pinned["histories"]["teasq"], \
+            f"fused packed codec drifted the {backend} teasq history"

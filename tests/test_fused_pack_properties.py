@@ -1,0 +1,73 @@
+"""Hypothesis property suite for the fused wire emitter (skipped without
+hypothesis, like tests/test_codecs.py; the always-running deterministic pins
+live in tests/test_fused_pack.py and tests/test_kernels.py).
+
+Properties: fused-vs-oracle stream bit-equality over adversarial shapes
+(n=1 scalars, the k==n dense fallback, the uncompressed p_q=32 point,
+tie-heavy magnitudes straddling the k-th place), word-level
+pack_segments/BitReader identity for widths 1-32 with odd/empty segments,
+and per-leaf kernel slices re-joined by concat_bitstreams equalling the
+one-pass tree twin.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codecs import PackedBitstreamCodec
+from repro.core.compression import expected_pytree_wire_bytes
+from repro.kernels.bitpack import BitReader, pack_segments
+from repro.kernels.fused_pack import (concat_bitstreams, fused_pack_leaf,
+                                      pack_leaves_host)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 700),
+       p_s=st.sampled_from([0.01, 0.05, 0.1, 0.25, 0.5, 0.9, 1.0]),
+       p_q=st.sampled_from([2, 3, 4, 7, 8, 13, 16, 31, 32]),
+       tie_heavy=st.booleans())
+def test_fused_stream_equals_oracle_stream(seed, n, p_s, p_q, tie_heavy):
+    rng = np.random.RandomState(seed)
+    if tie_heavy:
+        flat = rng.choice([0.0, 0.125, -0.125, 1.0, -1.0], size=n)
+    else:
+        flat = rng.randn(n)
+    tree = [flat.astype(np.float32)]
+    oracle = PackedBitstreamCodec(p_s, p_q, fused=False).encode(tree)
+    fused = PackedBitstreamCodec(p_s, p_q, fused=True).encode(tree)
+    assert fused.payload == oracle.payload
+    assert fused.nbytes == oracle.nbytes == len(oracle.payload)
+    if p_s < 1.0 or p_q < 32:   # dense point: analytic price excludes scales
+        assert len(fused.payload) == expected_pytree_wire_bytes(tree, p_s, p_q)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000),
+       widths=st.lists(st.integers(1, 32), min_size=1, max_size=6),
+       counts=st.lists(st.integers(0, 40), min_size=6, max_size=6))
+def test_word_level_pack_read_roundtrip(seed, widths, counts):
+    rng = np.random.RandomState(seed)
+    segs = [(rng.randint(0, 2 ** w, size=c, dtype=np.int64).astype(np.uint32), w)
+            for w, c in zip(widths, counts[:len(widths)])]
+    payload = pack_segments(segs)
+    total_bits = sum(v.size * w for v, w in segs)
+    assert len(payload) == (total_bits + 7) // 8
+    reader = BitReader(payload)
+    for v, w in segs:
+        np.testing.assert_array_equal(reader.read(v.size, w), v)
+    assert reader.bits_read == total_bits
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000),
+       sizes=st.lists(st.integers(1, 300), min_size=1, max_size=5),
+       p_s=st.sampled_from([0.05, 0.25, 0.5]),
+       p_q=st.sampled_from([2, 8, 16]))
+def test_per_leaf_kernel_concat_equals_tree_twin(seed, sizes, p_s, p_q):
+    rng = np.random.RandomState(seed)
+    leaves = [rng.randn(s).astype(np.float32) for s in sizes]
+    parts = [fused_pack_leaf(x, p_s, p_q, interpret=True) for x in leaves]
+    assert concat_bitstreams(parts) == pack_leaves_host(leaves, p_s, p_q)

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.fused_pack import fused_pack_leaf, pack_leaves_host
 from repro.kernels.ssd_scan import ssd_chunked_pallas, ssd_intra_chunk
 from repro.kernels.topk_quant import dequant, topk_quant
 from repro.models.ssm import ssd_chunked
@@ -75,6 +76,37 @@ def test_block_topk_vs_global_topk_error_bounded():
     k = int(0.25 * flat.size)
     global_mass = np.sort(np.abs(x.reshape(-1)))[-k:].sum()
     assert kept_mass >= 0.85 * global_mass
+
+
+# ----------------------------------------------------------------------
+# fused_pack: the one-pass sparsify+quantize+pack emitter.  Always-run
+# deterministic grid (the hypothesis suite lives in tests/test_fused_pack);
+# interpret mode exercises the exact body that lowers to TPU pallas_call.
+# ----------------------------------------------------------------------
+@pytest.mark.smoke
+@pytest.mark.parametrize("n", [1, 7, 100, 1500, 4097])
+@pytest.mark.parametrize("p_s", [0.05, 0.25, 1.0])
+@pytest.mark.parametrize("p_q", [2, 8, 32])
+def test_fused_pack_kernel_matches_host_twin(n, p_s, p_q):
+    """Kernel stream == numpy-twin stream, bit for bit, across odd sizes,
+    the k==n dense fallback (p_s=1.0) and raw-f32 values (p_q=32)."""
+    rng = np.random.RandomState(hash((n, int(p_s * 100), p_q)) % 2**31)
+    x = rng.randn(n).astype(np.float32)
+    payload, nbits = fused_pack_leaf(x, p_s, p_q, interpret=True)
+    assert payload == pack_leaves_host([x], p_s, p_q)
+    assert len(payload) == (nbits + 7) // 8
+
+
+@pytest.mark.smoke
+def test_fused_pack_kernel_tie_and_zero_regimes():
+    """Degenerate magnitudes: all-zero tensors (threshold 0, scale floor)
+    and heavily-tied data must still match the host twin exactly."""
+    for x in (np.zeros(300, np.float32),
+              np.tile(np.float32([0.5, -0.5, 0.0]), 100),
+              np.full(129, -0.25, np.float32)):
+        for p_s in (0.1, 0.5):
+            payload, _ = fused_pack_leaf(x, p_s, 8, interpret=True)
+            assert payload == pack_leaves_host([x], p_s, 8)
 
 
 # ----------------------------------------------------------------------
