@@ -55,7 +55,8 @@ import json
 import os
 import time
 
-from benchmarks.common import host_tuning_active, maybe_reexec_host_tuned
+from benchmarks.common import (host_tuning_active, maybe_reexec_host_tuned,
+                               profiled)
 
 import jax
 
@@ -71,7 +72,8 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
 
 def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
                  cohort_size: int = 0, task: str = "fmnist_cnn",
-                 scheduler: str = "heap") -> SimConfig:
+                 scheduler: str = "heap",
+                 handler_mode: str = "serial") -> SimConfig:
     """TEASQ at N devices with a constant K=10 aggregation cache and a
     200 kHz cell (longer rounds keep the demo's virtual-task count sane)."""
     return SimConfig(
@@ -80,16 +82,18 @@ def scale_config(n_devices: int, *, batch_size: int = 8, seed: int = 0,
         p_s=0.25, p_q=8, seed=seed,
         wireless=WirelessConfig(bandwidth_hz=2e5),
         cohort_size=cohort_size, cohort_channel_iters=6,
-        scheduler=scheduler)
+        scheduler=scheduler, handler_mode=handler_mode)
 
 
 def run_one(data, n_train: int, n_devices: int, backend: str,
             cohort_size: int, budget: float, seed: int = 0,
-            task: str = "fmnist_cnn", scheduler: str = "heap") -> dict:
+            task: str = "fmnist_cnn", scheduler: str = "heap",
+            handler_mode: str = "serial") -> dict:
     parts = partition_iid(n_train, n_devices, seed)
     w0 = get_task(task).init_params(jax.random.PRNGKey(seed))
     cfg = scale_config(n_devices, seed=seed, cohort_size=cohort_size,
-                       task=task, scheduler=scheduler)
+                       task=task, scheduler=scheduler,
+                       handler_mode=handler_mode)
     sim = make_sim(data, parts, w0, cfg, backend=backend)
     t0 = time.perf_counter()
     hist = sim.run(time_budget=budget, eval_every=10 ** 9)
@@ -98,7 +102,7 @@ def run_one(data, n_train: int, n_devices: int, backend: str,
     tasks = stats.completions if stats is not None else None
     return {
         "task": task, "backend": backend, "scheduler": scheduler,
-        "n_devices": n_devices,
+        "handler_mode": handler_mode, "n_devices": n_devices,
         "cohort_size": cohort_size, "wall_s": wall, "budget": budget,
         "rounds": hist[-1].round, "accuracy": hist[-1].accuracy,
         "bytes_up_mb": hist[-1].bytes_up / 1e6,
@@ -276,6 +280,16 @@ def main():
                     help="engine event loop (SimConfig.scheduler); 'batched'"
                          " runs solo and logs ms_per_task under the task's "
                          "'batched' key")
+    ap.add_argument("--handler-mode", choices=("serial", "wave"),
+                    default="serial",
+                    help="batched-scheduler event handling "
+                         "(SimConfig.handler_mode): 'serial' is the pinned "
+                         "bit-parity path, 'wave' dispatches same-kind "
+                         "event runs as vectorized waves (relaxed parity; "
+                         "rows are keyed *_wave_n<N>)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each timed run; the top-20 cumulative "
+                         "rows land next to results/engine_scale.json")
     ap.add_argument("--host-tuning", action="store_true",
                     help="re-exec with tcmalloc LD_PRELOAD (when installed) "
                          "and optional XLA host-device partitioning before "
@@ -331,29 +345,58 @@ def main():
         # then the per-task dispatch cost the ROADMAP item targets.
         task = "fmnist_mlp"
         rows = {}
-        # heap@1000 and batched@N get full budgets; heap@N gets a short one
-        # (it exists to price the heap at the same N, not to run long)
-        for scheduler, n, budget in (
-                ("heap", 1000, 20.0),
-                ("heap", args.devices, min(args.budget, 0.6)),
-                ("batched", args.devices, args.budget)):
+        if args.handler_mode == "wave":
+            # wave rows ride on the serial baselines already in the file;
+            # only the batched wave run itself is timed
+            runs = [("batched", args.devices, args.budget)]
+        else:
+            # heap@1000 and batched@N get full budgets; heap@N gets a
+            # short one (it exists to price the heap at the same N, not
+            # to run long)
+            runs = [("heap", 1000, 20.0),
+                    ("heap", args.devices, min(args.budget, 0.6)),
+                    ("batched", args.devices, args.budget)]
+        prof_dir = os.path.dirname(os.path.abspath(RESULTS_PATH))
+        for scheduler, n, budget in runs:
+            key = (f"batched_wave_n{n}" if args.handler_mode == "wave"
+                   else f"{scheduler}_n{n}")
             data = get_task(task).make_data(n, 1000, 0)
-            r = run_one(data, n, n, "engine", args.cohort, budget,
-                        task=task, scheduler=scheduler)
-            rows[f"{scheduler}_n{n}"] = r
-            print(f"engine_scale/{task}/dispatch_{scheduler}_n{n},"
+            with profiled(args.profile, os.path.join(
+                    prof_dir, f"engine_scale_dispatch_{key}.profile.txt")):
+                r = run_one(data, n, n, "engine", args.cohort, budget,
+                            task=task, scheduler=scheduler,
+                            handler_mode=args.handler_mode)
+            rows[key] = r
+            print(f"engine_scale/{task}/dispatch_{key},"
                   f"{(r['ms_per_task'] or 0) * 1e3:.1f},"
                   f"wall={r['wall_s']:.1f}s tasks={r['tasks']} "
                   f"ms_per_task={r['ms_per_task']:.3f}", flush=True)
-        same_n = (rows[f"heap_n{args.devices}"]["ms_per_task"]
-                  / rows[f"batched_n{args.devices}"]["ms_per_task"])
-        print(f"engine_scale/{task}/dispatch_same_n_ratio,{same_n:.2f},"
-              f"heap vs batched @ N={args.devices}")
+        # merge into the existing dispatch dict — a wave run must not
+        # clobber the serial baselines (and vice versa)
+        prev = {}
+        if os.path.exists(RESULTS_PATH):
+            with open(RESULTS_PATH) as f:
+                prev = json.load(f).get(task, {}).get("dispatch", {})
+        dispatch = {**prev, **rows}
+        if args.handler_mode == "wave":
+            base = dispatch.get(f"batched_n{args.devices}")
+            if base and base.get("ms_per_task"):
+                ratio = (base["ms_per_task"]
+                         / dispatch[f"batched_wave_n{args.devices}"]
+                         ["ms_per_task"])
+                dispatch[f"wave_vs_serial_n{args.devices}"] = ratio
+                print(f"engine_scale/{task}/dispatch_wave_vs_serial,"
+                      f"{ratio:.2f},batched serial vs wave @ "
+                      f"N={args.devices}")
+        else:
+            same_n = (rows[f"heap_n{args.devices}"]["ms_per_task"]
+                      / rows[f"batched_n{args.devices}"]["ms_per_task"])
+            dispatch["same_n_ratio"] = same_n
+            print(f"engine_scale/{task}/dispatch_same_n_ratio,"
+                  f"{same_n:.2f},heap vs batched @ N={args.devices}")
         os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
                     exist_ok=True)
-        merged = _merge_results(
-            RESULTS_PATH, task,
-            {"dispatch": {**rows, "same_n_ratio": same_n}})
+        merged = _merge_results(RESULTS_PATH, task, {"dispatch": dispatch})
         with open(RESULTS_PATH, "w") as f:
             json.dump(merged, f, indent=1)
         return
@@ -364,16 +407,24 @@ def main():
         # solo batched run: the heap rows in the results file are the
         # baseline; re-running the legacy loop at 10^5 devices would take
         # hours for a number the file already has
-        r = run_one(data, args.samples, args.devices, "engine", args.cohort,
-                    args.budget, task=args.task, scheduler="batched")
+        key = ("batched_wave" if args.handler_mode == "wave"
+               else "batched")
+        prof = os.path.join(
+            os.path.dirname(os.path.abspath(RESULTS_PATH)),
+            f"engine_scale_{args.task}_{key}.profile.txt")
+        with profiled(args.profile, prof):
+            r = run_one(data, args.samples, args.devices, "engine",
+                        args.cohort, args.budget, task=args.task,
+                        scheduler="batched",
+                        handler_mode=args.handler_mode)
         ms = r["ms_per_task"] or float("nan")
-        print(f"engine_scale/{args.task}/batched_n{args.devices},"
+        print(f"engine_scale/{args.task}/{key}_n{args.devices},"
               f"{ms * 1e3:.1f},"
               f"wall={r['wall_s']:.1f}s tasks={r['tasks']} "
               f"rounds={r['rounds']} ms_per_task={ms:.3f}", flush=True)
         os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
                     exist_ok=True)
-        merged = _merge_results(RESULTS_PATH, args.task, {"batched": r})
+        merged = _merge_results(RESULTS_PATH, args.task, {key: r})
         with open(RESULTS_PATH, "w") as f:
             json.dump(merged, f, indent=1)
         return

@@ -7,8 +7,10 @@ hundred simulated seconds (several hundred aggregation rounds for the async
 methods) and prints the Table-5-style comparison.  Runs on the
 strategy-based ``FLEngine`` by default; ``--backend legacy`` selects the
 monolithic reference simulator, ``--cohort 32`` enables vectorized
-cohort training, and ``--scheduler batched`` swaps in the array-backed
-batched event scheduler (bit-identical histories).
+cohort training, ``--scheduler batched`` swaps in the array-backed
+batched event scheduler (bit-identical histories), and ``--handler-mode
+wave`` adds the vectorized per-wave handlers on top of it (documented
+relaxed parity, built for 10^6-device fleets).
 
 ``--codec-policy tier_aware`` demos the adaptive per-device codec layer: a
 heterogeneous 3-tier fleet where the per-tier Alg. 5 search gives each
@@ -51,7 +53,8 @@ def run_fleet_demo(args) -> None:
                   p_s=0.25, p_q=8),
     ]
     cfg = FleetConfig(tasks=specs, n_devices=args.devices,
-                      scheduler=args.scheduler, assigner=args.assigner)
+                      scheduler=args.scheduler, assigner=args.assigner,
+                      handler_mode=args.handler_mode)
     fleet = build_fleet(cfg, iid=not args.noniid,
                         n_train=args.samples, n_test=args.samples // 5)
     t0 = time.time()
@@ -86,6 +89,15 @@ def main():
                          "reference one-event-at-a-time heap, or the "
                          "array-backed batched scheduler — bit-identical "
                          "histories, built for 10^4-10^5-device fleets "
+                         "(default: %(default)s)")
+    ap.add_argument("--handler-mode", choices=("serial", "wave"),
+                    default="serial",
+                    help="batched-scheduler event handlers "
+                         "(SimConfig.handler_mode): 'serial' replays the "
+                         "heap loop event-by-event (bit-identical, pinned); "
+                         "'wave' dispatches each selected batch as arrays — "
+                         "documented relaxed parity, built for 10^6-device "
+                         "fleets; requires --scheduler batched "
                          "(default: %(default)s)")
     ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
                     help="model family to train (repro.fl.tasks.TASKS): the "
@@ -164,6 +176,7 @@ def main():
                           time_budget=args.budget, epochs=1, eval_every=4,
                           backend=args.backend, cohort_size=args.cohort,
                           scheduler=args.scheduler,
+                          handler_mode=args.handler_mode,
                           codec=args.codec, task=args.task, **policy_kw,
                           **kw)
         best = max(h.accuracy for h in hist)

@@ -10,7 +10,13 @@
 #    batched-scheduler smoke slice (tests/test_batched_engine.py —
 #    small batched end-to-end runs on teasq and fedavg plus the
 #    EventTable/registry unit checks, so every build exercises BOTH
-#    SimConfig.scheduler paths), and the multi-task fleet smoke slice
+#    SimConfig.scheduler paths), the vectorized wave-handler smoke
+#    slice (tests/test_wave_handlers.py — `-m smoke` end-to-end runs
+#    with SimConfig.handler_mode="wave" on teasq/fedasync/fedavg plus
+#    the mode-validation checks, so every build exercises both handler
+#    modes; the exact wave-vs-heap parity grid, the hypothesis property
+#    suite and the serial re-pin stay tier-1-only), and the multi-task
+#    fleet smoke slice
 #    (tests/test_fleet.py — ASSIGNERS unit checks plus a 4-family
 #    heterogeneous shared-fleet run, so every build exercises the
 #    repro.fl.fleet layer; the bit-parity and checkpoint/resume tests
@@ -24,6 +30,13 @@
 # 3. the docs check: tests/test_docs.py parses the fenced commands in
 #    README.md and docs/*.md and verifies every referenced file and flag
 #    exists (so the documentation front door cannot silently rot)
+#
+# Opt-in (NOT run by default — pytest.ini deselects the `scale` marker):
+# the wall-clock stress tier, including the 10^6-device wave-mode
+# dispatch stress test (tests/test_wave_handlers.py — several minutes
+# and a few GB of RAM):
+#
+#   PYTHONPATH=src python -m pytest -m scale -o addopts="" -q
 #
 # Usage: scripts/tier1.sh [extra pytest args for the tier-1 run]
 set -euo pipefail

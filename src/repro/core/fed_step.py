@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.staleness import mixing_alpha, staleness_weight
+from repro.core.staleness import mixing_alpha, stacked_staleness_weights
 from repro.sharding.rules import (Rules, active_rules, logical_axes_for,
                                   shard_map)
 
@@ -201,8 +201,10 @@ def make_fed_train_step(loss_fn: Callable, fed: FedConfig
 
         # 2. per-group compressed deltas
         delta = jax.tree.map(lambda wl, w0: wl - w0[None], w_local, params)
-        wts = staleness_weight(staleness, fed.a)          # (G,)
-        wts = wts / jnp.sum(wts)
+        # Eqs. 6-7 over equal-sized groups (n_c == 1): the same normalized
+        # weights the event-driven wave aggregation uses.
+        wts = stacked_staleness_weights(staleness, jnp.ones_like(
+            jnp.asarray(staleness, jnp.float32)), fed.a)  # (G,)
         a_t = mixing_alpha(staleness, fed.alpha, fed.a)
 
         # 3. exchange + staleness-weighted combine

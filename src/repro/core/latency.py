@@ -61,3 +61,27 @@ def sample_compute_latency(a_k: float, phi_k: float, tau_b: float,
 
 def comm_latency(bits: float, rate_bps: float) -> float:
     return bits / max(rate_bps, 1.0)
+
+
+# ----------------------------------------------------------------------
+# Vectorized (wave) variants.
+#
+# RNG draw-order contract: ``sample_compute_latency_batch`` consumes the
+# generator with ONE ``rng.exponential(size=G)`` call, i.e. exactly the
+# stream positions G sequential scalar draws would use, with value i
+# going to position i of the input arrays.  Wave callers pass the arrays
+# in ascending device-index order (the documented relaxed-parity order of
+# ``SimConfig.handler_mode="wave"``), so draw i belongs to the i-th
+# lowest device id of the wave — not to the i-th heap pop.
+# ----------------------------------------------------------------------
+def comm_latency_batch(bits, rate_bps: np.ndarray) -> np.ndarray:
+    """Elementwise ``comm_latency`` — same float64 ops, no RNG."""
+    return np.asarray(bits, dtype=np.float64) / np.maximum(rate_bps, 1.0)
+
+
+def sample_compute_latency_batch(a_k: np.ndarray, phi_k: np.ndarray,
+                                 tau_b: np.ndarray,
+                                 rng: np.random.RandomState) -> np.ndarray:
+    """G draws of L^cp in one call (see draw-order contract above)."""
+    tau_b = np.asarray(tau_b, dtype=np.float64)
+    return a_k * tau_b + rng.exponential(tau_b / phi_k)

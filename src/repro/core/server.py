@@ -11,7 +11,7 @@ import functools
 import math
 from typing import Any, Callable, List, Optional, Tuple
 
-from repro.core.staleness import aggregate_cache
+from repro.core.staleness import aggregate_cache, aggregate_cache_stacked
 
 
 @dataclasses.dataclass
@@ -63,3 +63,26 @@ class TeasqServer:
         self.cache.clear()
         self.t += 1
         return True
+
+    def receive_many(self, entries: List[Tuple[Any, int, int]]) -> List[bool]:
+        """Wave-mode Receiver (Alg. 2 over a whole arrival group): push the
+        group's ``(w_local, h_c, n_c)`` entries in event order, aggregating
+        at every cache-fill boundary with the *stacked* Eqs. 6-10 kernel
+        (``aggregate_cache_stacked`` — one leading-axis stack per leaf
+        instead of K separate tree arguments).  Same cache/round semantics
+        as K calls to :meth:`receive`; the reduction order inside one
+        aggregation differs (tensordot vs. sequential sum), which is part of
+        ``handler_mode="wave"``'s relaxed-parity contract."""
+        done = []
+        for w_local, h, n_samples in entries:
+            self.active = max(0, self.active - 1)
+            self.cache.append((w_local, h, n_samples))
+            if len(self.cache) < self.cfg.cache_size:
+                done.append(False)
+                continue
+            self.w = aggregate_cache_stacked(self.w, self.cache, self.t,
+                                             self.cfg.alpha, self.cfg.a)
+            self.cache.clear()
+            self.t += 1
+            done.append(True)
+        return done

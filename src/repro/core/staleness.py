@@ -67,3 +67,46 @@ def aggregate_cache(w_global: Any, cache: List[Tuple[Any, int, int]],
     n_samples = np.asarray([c[2] for c in cache], np.float32)
     return _aggregate_cache_jit(w_global, updates, staleness, n_samples,
                                 alpha, a)
+
+
+# ----------------------------------------------------------------------
+# Stacked (wave) variant: the K cached updates arrive as ONE leading-axis
+# stack per leaf instead of a K-tuple of trees.  Passing K*L separate
+# leaves made _aggregate_cache_jit's host-side arg flattening the dominant
+# per-round dispatch cost at large N; the stacked form is a handful of
+# args regardless of K.  The reduction runs as a tensordot over the
+# stacked axis — float reassociation vs. the tuple kernel's sequential
+# sum is covered by handler_mode="wave"'s relaxed-parity contract.
+# ----------------------------------------------------------------------
+def stacked_staleness_weights(staleness, n_samples, a: float = 0.5):
+    """Eqs. 6-7 weights, normalized — shared by the event-driven wave
+    aggregation and the datacenter fed_step combine."""
+    s = staleness_weight(staleness, a)
+    wts = s * jnp.asarray(n_samples, jnp.float32)
+    return wts / jnp.sum(wts)
+
+
+@jax.jit
+def _aggregate_cache_stacked_jit(w_global: Any, stacked: Any,
+                                 staleness: jax.Array, n_samples: jax.Array,
+                                 alpha, a) -> Any:
+    wts = stacked_staleness_weights(staleness, n_samples, a)
+    u = jax.tree.map(
+        lambda st: jnp.tensordot(wts, st.astype(jnp.float32), axes=1),
+        stacked)
+    a_t = alpha * (jnp.mean(staleness) + 1.0) ** (-a)
+    return jax.tree.map(lambda wu, wg: a_t * wu + (1.0 - a_t) * wg,
+                        u, w_global)
+
+
+def aggregate_cache_stacked(w_global: Any, cache: List[Tuple[Any, int, int]],
+                            t: int, alpha: float, a: float = 0.5) -> Any:
+    """Wave-mode aggregation: host-stack the K updates once, then one
+    jitted call with a K-independent argument count."""
+    stacked = jax.tree.map(
+        lambda *ls: np.stack([np.asarray(l) for l in ls]),
+        *(c[0] for c in cache))
+    staleness = np.asarray([t - c[1] for c in cache], np.float32)
+    n_samples = np.asarray([c[2] for c in cache], np.float32)
+    return _aggregate_cache_stacked_jit(w_global, stacked, staleness,
+                                        n_samples, alpha, a)

@@ -68,8 +68,9 @@ import numpy as np
 
 from repro.core.client import local_update
 from repro.core.codecs import Codec, IdentityCodec, ThresholdGraphCodec
-from repro.core.latency import (comm_latency, device_rates,
-                                sample_compute_latency)
+from repro.core.latency import (comm_latency, comm_latency_batch,
+                                device_rates, sample_compute_latency,
+                                sample_compute_latency_batch)
 from repro.core.server import ServerConfig, TeasqServer
 from repro.fl.simulator import (LogEntry, ScenarioConfig, SimConfig,
                                 tier_assignment)
@@ -123,6 +124,25 @@ class DeviceRegistry:
                                     * 0.002 * cfg.batch_size, rng=rng)
         return dl, cp, ul
 
+    def round_latency_batch(self, ks: np.ndarray, bits_down, bits_up,
+                            n_batches: np.ndarray,
+                            rng: np.random.RandomState
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``round_latency`` over a whole grant wave: same elementwise
+        float64 arithmetic, ONE ``rng.exponential(size=G)`` draw for the
+        compute latencies.  Wave callers pass ``ks`` sorted ascending, so
+        draw i belongs to the i-th lowest device id of the wave — the
+        documented ``handler_mode="wave"`` draw order (heap-pop order is
+        what the serial path consumes)."""
+        cfg = self.cfg
+        dl = comm_latency_batch(bits_down, self.down_rates[ks])
+        ul = comm_latency_batch(bits_up, self.up_rates[ks])
+        tau_b = (np.asarray(n_batches, np.float64) * cfg.epochs
+                 * 0.002 * cfg.batch_size)
+        cp = sample_compute_latency_batch(self.a_k[ks], self.phi_k[ks],
+                                          tau_b, rng)
+        return dl, cp, ul
+
 
 # Event kinds, shared by both schedulers: the heap path stores the name in
 # its event tuples, the batched path stores the id in its resident arrays.
@@ -173,6 +193,30 @@ class EventTable:
         self.time[k] = np.inf
         self.payload[k] = None
 
+    def put_wave(self, ks: np.ndarray, ts: np.ndarray, seqs: np.ndarray,
+                 kind: str, payloads, h, task: int = 0) -> None:
+        """Vectorized ``put`` for a whole wave of same-kind events — one
+        scatter per array instead of G scalar slot writes.  ``h``/``task``
+        are scalars (a wave shares its dispatch round and job id)."""
+        assert np.all(self.time[ks] == np.inf), \
+            "a wave member already has a scheduled event"
+        self.time[ks] = ts
+        self.seq[ks] = seqs
+        self.kind[ks] = KIND_IDS[kind]
+        self.h[ks] = h
+        self.task[ks] = task
+        if payloads is None:
+            return
+        pl = self.payload
+        for k, p in zip(ks.tolist(), payloads):
+            pl[k] = p
+
+    def clear_wave(self, ks: np.ndarray) -> None:
+        self.time[ks] = np.inf
+        pl = self.payload
+        for k in ks.tolist():
+            pl[k] = None
+
     def select_batch(self, k_max: int) -> np.ndarray:
         """Device ids of the next <= ``k_max`` scheduled events (plus any
         events tied with the k-th time), in global ``(time, seq)`` order."""
@@ -212,10 +256,27 @@ class _FifoWaiting:
         assert i == 0, "the waiting queue is FIFO-only"
         k = self._items[self._head]
         self._head += 1
+        self._maybe_compact()
+        return k
+
+    def extend(self, ks) -> None:
+        """Park a whole wave behind the admission gate in one call."""
+        self._items.extend(ks)
+
+    def pop_many(self, g: int) -> List[int]:
+        """Pop up to ``g`` waiters as ONE slice — the wave-grant drain.
+        G scalar ``pop(0)`` calls advance the head cursor G times and can
+        trigger G compaction checks; this is a single slice + one check."""
+        h = self._head
+        out = self._items[h:h + g]
+        self._head = h + len(out)
+        self._maybe_compact()
+        return out
+
+    def _maybe_compact(self) -> None:
         if self._head > 1024 and self._head * 2 >= len(self._items):
             del self._items[:self._head]
             self._head = 0
-        return k
 
 
 class ChannelMeter:
@@ -261,6 +322,31 @@ class ChannelMeter:
         nbytes = codec.wire_bytes(tree)
         self.up(nbytes, tier)
         return nbytes
+
+    # -- wave accounting: one call per grant wave instead of G scalar
+    # calls.  Integer-exact: the bincount accumulates int64 byte counts as
+    # float64 (exact below 2^53, far above any simulated transfer volume)
+    # and converts back per tier, so per-tier totals match G serial calls.
+    def _wave(self, nbytes: np.ndarray, tiers: np.ndarray,
+              tier_tot: Dict[int, int]) -> Tuple[int, int]:
+        sums = np.bincount(tiers, weights=nbytes)
+        for t in np.flatnonzero(sums).tolist():
+            tier_tot[t] = tier_tot.get(t, 0) + int(sums[t])
+        return int(nbytes.sum()), int(nbytes.max())
+
+    def down_wave(self, nbytes: np.ndarray, tiers: np.ndarray) -> None:
+        if not len(nbytes):
+            return
+        tot, mx = self._wave(nbytes, tiers, self.tier_down)
+        self.bytes_down += tot
+        self.max_down = max(self.max_down, mx)
+
+    def up_wave(self, nbytes: np.ndarray, tiers: np.ndarray) -> None:
+        if not len(nbytes):
+            return
+        tot, mx = self._wave(nbytes, tiers, self.tier_up)
+        self.bytes_up += tot
+        self.max_up = max(self.max_up, mx)
 
 
 @dataclasses.dataclass
@@ -347,6 +433,20 @@ def _cohort_round(w_versions, vidx, xs, ys, didx, bidx, valid, *,
 
     out, _ = jax.lax.scan(step, w_recv, (bidx, valid))
     return jax.vmap(channel)(out)
+
+
+@functools.partial(jax.jit, static_argnames=("p_s", "p_q", "iters"))
+def _zero_step_round(w_versions, *, p_s: float, p_q: int, iters: int):
+    """Wave-mode cohort fast path for groups with ZERO local steps (every
+    member has n_k < batch_size, the dispatch-benchmark regime): with no
+    SGD steps the up-channel input is exactly the down-channel output, so
+    the cohort result depends only on the model VERSION — encode the V
+    distinct versions twice (down then up) instead of running the C-wide
+    ``_cohort_round`` (V ~= C / cache_size under the admission gate, a
+    ~K-fold cut in channel work).  Per-task results are gathers of the
+    (V, ...) output on the host side."""
+    channel = ThresholdGraphCodec(p_s, p_q, iters).apply_tree
+    return jax.vmap(lambda w: channel(channel(w)))(w_versions)
 
 
 class CohortTrainer:
@@ -458,6 +558,17 @@ class CohortTrainer:
         # every distinct t_max recompiles the fused round
         t_max = max(t.bidx.shape[0] for t in group)
         t_max = self._pad_pow2(t_max) if t_max else 0
+        if t_max == 0 and cfg.handler_mode == "wave":
+            # zero local steps => the result is a pure function of the
+            # version; gated to wave mode so the serial path keeps running
+            # the exact pinned _cohort_round program
+            w_up_v = _zero_step_round(w_versions, p_s=p_s, p_q=p_q,
+                                      iters=self.channel_iters)
+            w_np = jax.tree.map(np.asarray, w_up_v)
+            for t in group:
+                t.result = (jax.tree.map(lambda a, v=t.version: a[v], w_np),
+                            t.n_k)
+            return
         bs = cfg.batch_size
         bidx = np.zeros((c_pad, t_max, bs), np.int32)
         valid = np.zeros((c_pad, t_max), np.float32)
@@ -513,6 +624,8 @@ class FLEngine:
     (no scenario, ``cohort_size=0``) it consumes the seeded RNG in the exact
     legacy order and reproduces its ``LogEntry`` history bit-for-bit."""
 
+    supports_wave = False   # handler_mode="wave" needs the batched arrays
+
     def __init__(self, data: Dict[str, np.ndarray],
                  partitions: List[np.ndarray], w_init: Any, cfg: SimConfig,
                  strategy: Optional[Any] = None, *,
@@ -533,6 +646,16 @@ class FLEngine:
         self.rng = np.random.RandomState(cfg.seed) if rng is None else rng
         n = cfg.n_devices
         assert len(partitions) == n
+        if cfg.handler_mode not in ("serial", "wave"):
+            raise ValueError(
+                f"unknown handler_mode {cfg.handler_mode!r}; "
+                "expected 'serial' or 'wave'")
+        if cfg.handler_mode == "wave" and not self.supports_wave:
+            raise ValueError(
+                "handler_mode='wave' needs the batched scheduler "
+                "(SimConfig.scheduler='batched')")
+        # per-device partition sizes, resident for vectorized n_batches
+        self.part_sizes = np.asarray([len(p) for p in partitions], np.int64)
         self.devices = (DeviceRegistry(cfg, self.rng) if devices is None
                         else devices)
         self.server = TeasqServer(w_init, ServerConfig(
@@ -1044,12 +1167,55 @@ class BatchedEngine(FLEngine):
       large fleet parks behind the C-fraction admission gate).
 
     The request/failure handlers are inherited unchanged; the heap path
-    stays untouched as the parity oracle."""
+    stays untouched as the parity oracle.
+
+    **Wave mode** (``SimConfig.handler_mode="wave"``) replaces the scalar
+    fall-through with vectorized *wave* handlers: each selected batch is
+    split into maximal same-kind event runs and every run is processed as
+    arrays —
+
+    * **grant waves** (Alg. 1 Distributor): one liveness mask, one
+      admission-gate slice (the first ``free`` run members dispatch, the
+      rest park via a single ``_FifoWaiting.extend``), codecs for the whole
+      wave via ``channels_for`` with per-unique-codec wire pricing, and ONE
+      ``DeviceRegistry.round_latency_batch`` call whose RNG draws are
+      assigned in ascending device-index order; the resulting arrivals
+      scatter into the ``EventTable`` in one ``put_wave``.
+    * **arrival waves** (Alg. 2 Receiver/Updater, Eqs. 6-10): one
+      ``CodecPolicy.observe_arrivals`` scatter, then
+      ``ProtocolStrategy.on_arrivals`` — the TEA family fuses the cache
+      insert + staleness-weighted aggregation through the *stacked*
+      Eqs. 6-10 kernel (``aggregate_cache_stacked``), one segment per
+      cache fill so eval logs observe the exact per-round server state.
+      Re-requests and the waiting-queue drain (one ``pop_many`` slice)
+      follow as a single request scatter.
+
+    The relaxed-parity contract vs. ``"serial"``: protocol decisions still
+    happen in global ``(time, seq)`` event order, but (1) RNG draws are
+    batched per wave — grant latencies in device-index order, scenario
+    draws in wave order — instead of interleaved per heap pop; (2) events
+    spawned by a wave member are processed after the wave, never between
+    members, so a re-dispatch within a wave observes the post-wave server
+    state — in particular an arrival spawned *inside* an arrival wave's
+    time span lands after it, which can regroup cache fills and shift
+    round-completion instants relative to the heap order (the effect
+    shrinks as fleets grow and waves become time-dense); (3) one
+    aggregation reduces via tensordot instead of a
+    sequential sum; (4) the deferred cohort path may use the
+    ``_zero_step_round`` version-deduplicated channel.  The wave/heap
+    property suite (tests/test_wave_handlers.py) pins what survives:
+    identical event multisets, per-device completion counts and per-tier
+    byte totals on deterministic-latency fleets, and the liveness/byte
+    invariants at scale."""
 
     SELECT_K = 1024   # selection width; correctness is width-independent
 
+    supports_wave = True
+
     def _run_async(self, time_budget: float, max_rounds: int,
                    eval_every: int) -> List[LogEntry]:
+        if self.cfg.handler_mode == "wave":
+            return self._run_wave(time_budget, max_rounds, eval_every)
         table = self.devices.event_table()
         n = self.cfg.n_devices
         self._resume()
@@ -1131,6 +1297,334 @@ class BatchedEngine(FLEngine):
         if self.devices.alive[k]:
             push(now, "request", k)
         self._drain_waiting(now, push, waiting)
+
+    # -- wave mode (handler_mode="wave") -----------------------------------
+    def _run_wave(self, time_budget: float, max_rounds: int,
+                  eval_every: int) -> List[LogEntry]:
+        """Wave event loop: same selection as the serial batched loop, but
+        each maximal same-kind run of the selected batch dispatches as one
+        vectorized wave (see the class docstring for the relaxed-parity
+        contract).  Events spawned by a wave join the table immediately and
+        interleave at the next wave *boundary*; checkpoint state is
+        identical to the serial batched loop (table + waiting queue), so a
+        wave run can be resumed serially and vice versa."""
+        table = self.devices.event_table()
+        n = self.cfg.n_devices
+        self._resume()
+        if not self._started:
+            if n:
+                table.time[:] = self.rng.uniform(0.0, 0.05, n)
+                table.seq[:] = np.arange(n)
+                table.kind[:] = KIND_IDS["request"]
+            self._seq = n
+            self._waiting = _FifoWaiting()
+            self._log(0.0)
+            self._started = True
+        waiting = self._waiting
+        # overflow heap of events spawned inside the current batch horizon:
+        # (time, seq, kind_id, device, payload, h) — kind as int id so runs
+        # merge against the batch's int8 kind array
+        spawned: List[Tuple[float, int, int, int, Any, int]] = []
+        horizon = (np.inf, np.inf)
+
+        def push(t, kind, k, payload=None, h=0):
+            table.put(k, t, self._seq, kind, payload, h)
+            if (t, self._seq) < horizon:
+                heapq.heappush(spawned,
+                               (t, self._seq, KIND_IDS[kind], k, payload, h))
+            self._seq += 1
+
+        def push_wave(ts_w, ks_w, kind, payloads, h):
+            g = len(ks_w)
+            if not g:
+                return
+            seqs = self._seq + np.arange(g)
+            self._seq += g
+            table.put_wave(ks_w, ts_w, seqs, kind, payloads, h)
+            # fresh seqs always exceed the horizon seq, so only a strictly
+            # earlier time puts a new event inside the current batch
+            kid = KIND_IDS[kind]
+            for j in np.flatnonzero(ts_w < horizon[0]).tolist():
+                heapq.heappush(spawned, (
+                    float(ts_w[j]), int(seqs[j]), kid, int(ks_w[j]),
+                    None if payloads is None else payloads[j], int(h)))
+
+        req_id = KIND_IDS["request"]
+        arr_id = KIND_IDS["arrival"]
+        now = self._now
+        stop = False
+        while not stop:
+            sel = table.select_batch(self.SELECT_K)
+            if not len(sel):
+                break
+            ts = table.time[sel]
+            ss = table.seq[sel]
+            kinds = table.kind[sel]
+            hs = table.h[sel]
+            payloads = [table.payload[k] for k in sel.tolist()]
+            horizon = (float(ts[-1]), int(ss[-1]))
+            bounds = np.flatnonzero(np.diff(kinds) != 0) + 1
+            i, m, b = 0, len(sel), 0
+            while i < m or spawned:
+                if not spawned:
+                    # fast path: the next run is a contiguous batch slice
+                    while b < len(bounds) and bounds[b] <= i:
+                        b += 1
+                    j = int(bounds[b]) if b < len(bounds) else m
+                    wts, wks = ts[i:j], sel[i:j]
+                    wps, whs = payloads[i:j], hs[i:j]
+                    kid = int(kinds[i])
+                    i = j
+                else:
+                    # merge the overflow heap with the batch cursor event by
+                    # event until the kind changes — spawned events are the
+                    # wave's own re-requests/drains, i.e. the next wave
+                    rt: List[float] = []
+                    rk: List[int] = []
+                    rp: List[Any] = []
+                    rh: List[int] = []
+                    kid = -1
+                    while True:
+                        if spawned and (i >= m or
+                                        (spawned[0][0], spawned[0][1])
+                                        < (ts[i], ss[i])):
+                            e = spawned[0]
+                            if kid < 0:
+                                kid = e[2]
+                            elif e[2] != kid:
+                                break
+                            heapq.heappop(spawned)
+                            rt.append(e[0])
+                            rk.append(e[3])
+                            rp.append(e[4])
+                            rh.append(e[5])
+                        elif i < m:
+                            if kid < 0:
+                                kid = int(kinds[i])
+                            elif int(kinds[i]) != kid:
+                                break
+                            rt.append(float(ts[i]))
+                            rk.append(int(sel[i]))
+                            rp.append(payloads[i])
+                            rh.append(int(hs[i]))
+                            i += 1
+                        else:
+                            break
+                    wts = np.asarray(rt, np.float64)
+                    wks = np.asarray(rk, np.int64)
+                    wps, whs = rp, np.asarray(rh, np.int64)
+                if self.server.t >= max_rounds:
+                    stop = True
+                    break
+                # budget / round-cap prefix cut: unprocessed members keep
+                # their table slots, so a later ``run`` resumes exactly
+                # here.  A *partial* budget cut does not end the loop —
+                # the processed prefix spawns re-requests at times still
+                # inside the budget, which serial order grants before
+                # stopping; the drain terminates because every wave after
+                # the cut point is itself cut (to zero once no spawned
+                # event precedes it).  The round cap, by contrast, stops
+                # the stream at the capping event exactly like the serial
+                # loop's per-event ``server.t >= max_rounds`` check.
+                cut = int(np.searchsorted(wts, time_budget, side="right"))
+                capped = False
+                if kid == arr_id:
+                    srv = self.server
+                    if getattr(self.strategy, "arrival_wave", False):
+                        allowed = ((max_rounds - srv.t)
+                                   * srv.cfg.cache_size - len(srv.cache))
+                    else:
+                        allowed = max_rounds - srv.t
+                    if max(0, allowed) < cut:
+                        cut = max(0, allowed)
+                        capped = True
+                if cut < len(wts):
+                    stop = True
+                    if not cut:
+                        break
+                    wts, wks = wts[:cut], wks[:cut]
+                    wps, whs = wps[:cut], whs[:cut]
+                table.clear_wave(wks)
+                if kid == req_id:
+                    self._wave_requests(wts, wks, push, push_wave, waiting)
+                elif kid == arr_id:
+                    self._wave_arrivals(wts, wks, wps, whs, eval_every,
+                                        push, push_wave, waiting)
+                else:
+                    for t_f, k_f, p_f in zip(wts.tolist(), wks.tolist(),
+                                             wps):
+                        self._handle_failure(t_f, int(k_f), p_f, push,
+                                             waiting)
+                if not stop:
+                    now = float(wts[-1])
+                if capped:
+                    break
+            spawned.clear()   # leftovers (on stop) still live in `table`
+            horizon = (np.inf, np.inf)
+        if stop:
+            # resume cursor = earliest unprocessed event, exactly where
+            # the serial loops stop (they break ON that event); empty
+            # slots hold +inf, so min() scans the whole table once
+            rem = float(table.time.min()) if n else np.inf
+            if np.isfinite(rem):
+                now = rem
+        self._now = now
+        self._log(min(now, time_budget))
+        self._tail_logged = True
+        return self.history
+
+    def _wave_requests(self, wts, wks, push, push_wave, waiting) -> None:
+        """Alg. 1 Distributor over a same-kind request run: one liveness
+        mask, one admission-gate slice (run members are already in event
+        order, so granting the first ``free`` and parking the rest matches
+        serial per-event gating), one wire-pricing pass over the wave's
+        codecs, one scenario draw vector, one ``round_latency_batch`` call
+        (device-index draw order) and one arrival scatter."""
+        dv = self.devices
+        mask = dv.alive[wks]
+        if not mask.all():
+            wks, wts = wks[mask], wts[mask]
+        srv = self.server
+        free = max(srv.cfg.max_parallel - srv.active, 0)
+        if free < len(wks):
+            waiting.extend(wks[free:].tolist())
+            wks, wts = wks[:free], wts[:free]
+        g = len(wks)
+        if not g:
+            return
+        if not self.trainer.deferred:
+            # the serial trainer's codec roundtrips interleave RNG draws
+            # with the latency draws per grant — keep the scalar handler
+            # (slots were already granted-gated above, but the inherited
+            # handler re-checks the gate, which is a no-op here)
+            for t_s, k_s in zip(wts.tolist(), wks.tolist()):
+                self._handle_request(t_s, int(k_s), push, waiting)
+            return
+        self.stats.dispatches += g
+        srv.active += g
+        w_t, t0 = srv.w, srv.t
+        codecs = self.strategy.channels_for(t0, wks)
+        tiers = dv.tier[wks]
+        # wire price once per unique codec instance: wire_bytes is
+        # shape-only / value-independent, and resolve_codec caches
+        # instances, so a wave usually prices one or a handful of codecs
+        nbytes = np.empty(g, np.int64)
+        seen: Dict[int, int] = {}
+        for idx, c in enumerate(codecs):
+            v = seen.get(id(c))
+            if v is None:
+                v = seen[id(c)] = c.wire_bytes(w_t)
+            nbytes[idx] = v
+
+        scen = self.scenario
+        if scen is not None and scen.active and (
+                scen.dropout_prob + scen.failure_prob > 0):
+            u = self.scenario_rng.random_sample(g)
+            fail = u < scen.dropout_prob + scen.failure_prob
+            if fail.any():
+                f = np.flatnonzero(fail)
+                # failing members: down metered, failure event mid-round;
+                # latency + fail-point draws in device-index order
+                f = f[np.argsort(wks[f], kind="stable")]
+                fks = wks[f]
+                self.channel.down_wave(nbytes[f], tiers[f])
+                nb = np.maximum(1, self.part_sizes[fks]
+                                // self.cfg.batch_size)
+                dl, cp, _ = dv.round_latency_batch(
+                    fks, nbytes[f] * 8.0, np.zeros(len(f)), nb,
+                    self.scenario_rng)
+                fail_at = wts[f] + self.scenario_rng.uniform(
+                    0.0, dl + cp, len(f))
+                for j, fi in enumerate(f.tolist()):
+                    push(float(fail_at[j]), "failure", int(wks[fi]),
+                         "dropout" if u[fi] < scen.dropout_prob
+                         else "transient")
+                keep = ~fail
+                wks, wts = wks[keep], wts[keep]
+                nbytes, tiers = nbytes[keep], tiers[keep]
+                codecs = [c for c, kp in zip(codecs, keep.tolist()) if kp]
+                g = len(wks)
+                if not g:
+                    return
+
+        self.channel.down_wave(nbytes, tiers)
+        tasks = [self.trainer.submit(int(k), w_t, t0, c.p_s, c.p_q)
+                 for k, c in zip(wks.tolist(), codecs)]
+        self.channel.up_wave(nbytes, tiers)
+        order = np.argsort(wks, kind="stable")   # device-index draw order
+        ko = wks[order]
+        bits = nbytes[order] * 8.0
+        nb = np.maximum(1, self.part_sizes[ko] // self.cfg.batch_size)
+        dl, cp, ul = dv.round_latency_batch(ko, bits, bits, nb, self.rng)
+        push_wave(wts[order] + dl + cp + ul, ko, "arrival",
+                  [tasks[idx] for idx in order.tolist()], t0)
+
+    def _wave_arrivals(self, wts, wks, wps, whs, eval_every, push,
+                       push_wave, waiting, push_wave_free=None,
+                       max_rounds=None) -> None:
+        """Alg. 2 Receiver/Updater over a same-kind arrival run.  TEA-family
+        strategies (``arrival_wave=True``) fuse the cache inserts and the
+        Eqs. 6-10 aggregation via ``on_arrivals``/``receive_many``,
+        processed in segments that end exactly at cache-fill boundaries so
+        each eval log observes the same server round/state as the serial
+        path.  Other strategies keep the bit-faithful scalar handler.
+
+        ``push_wave_free`` routes the re-request scatter (a multi-task
+        fleet hands requests back unassigned, task=-1); ``max_rounds``,
+        when given, truncates the run at the round cap and *drops* the
+        excess arrivals — the fleet semantics, where a finished job's
+        in-flight events are consumed and ignored while other jobs keep
+        running (the single-task loop instead cuts at the cap and leaves
+        the excess scheduled)."""
+        srv = self.server
+        strategy = self.strategy
+        fused = getattr(strategy, "arrival_wave", False)
+        if max_rounds is not None:
+            allowed = ((max_rounds - srv.t) * srv.cfg.cache_size
+                       - len(srv.cache)) if fused else max_rounds - srv.t
+            allowed = max(0, allowed)
+            if allowed < len(wks):
+                wts, wks = wts[:allowed], wks[:allowed]
+                wps, whs = wps[:allowed], whs[:allowed]
+        g = len(wks)
+        if not g:
+            return
+        if not fused or (g == 1 and push_wave_free is None):
+            for idx in range(g):
+                self._handle_arrival(float(wts[idx]), int(wks[idx]),
+                                     wps[idx], int(whs[idx]), eval_every,
+                                     push, waiting)
+            return
+        K = srv.cfg.cache_size
+        t0, c0 = srv.t, len(srv.cache)
+        # staleness of arrival idx as the serial loop would observe it:
+        # t has advanced by one per preceding cache fill
+        stal = np.maximum(0, t0 + (c0 + np.arange(g)) // K - whs)
+        strategy.policy.observe_arrivals(wks.tolist(), stal.tolist())
+        ks_l, hs_l = wks.tolist(), whs.tolist()
+        arrivals = [(float(wts[idx]), ks_l[idx], wps[idx], hs_l[idx])
+                    for idx in range(g)]
+        start = 0
+        while start < g:
+            seg_end = min(g, start + (K - len(srv.cache)))
+            dones = strategy.on_arrivals(self, arrivals[start:seg_end])
+            if dones[-1] and srv.t % eval_every == 0:
+                self._log(float(wts[seg_end - 1]))
+            start = seg_end
+        self.stats.completions += g
+        np.add.at(self.stats.completed_per_device, wks, 1)
+        alive = self.devices.alive[wks]
+        # a fleet hands freed devices back to its assigner (task=-1)
+        (push_wave_free or push_wave)(wts[alive], wks[alive],
+                                      "request", None, 0)
+        # one-slice drain vs. the serial loop's per-arrival pops; drained
+        # request j fires at arrival j's own timestamp, matching the slot
+        # release order a serial drain would produce
+        n_drain = min(len(waiting), max(0, srv.cfg.max_parallel
+                                        - srv.active))
+        if n_drain:
+            drained = np.asarray(waiting.pop_many(n_drain), np.int64)
+            push_wave(wts[:n_drain], drained, "request", None, 0)
 
     # -- checkpoint/resume: EventTable instead of the heap -----------------
     def _sched_state(self, reg) -> Dict[str, Any]:

@@ -85,6 +85,12 @@ class FleetConfig:
     n_devices: int = 100
     seed: int = 0
     scheduler: str = "heap"
+    # "serial" (bit-identical per-event loop) or "wave" (task-id-aware
+    # vectorized waves; needs scheduler="batched") — the fleet-level analog
+    # of SimConfig.handler_mode, rewritten onto every per-task spec so the
+    # runtimes' wave-gated paths (e.g. the cohort zero-step fast path)
+    # agree with the fleet loop
+    handler_mode: str = "serial"
     assigner: str = "round_robin"
     shares: Optional[Sequence[float]] = None     # weighted assigner only
     scenario: Optional[ScenarioConfig] = None
@@ -94,7 +100,8 @@ class FleetConfig:
     def resolve(self, i: int) -> SimConfig:
         return dataclasses.replace(
             self.tasks[i], n_devices=self.n_devices, seed=self.seed,
-            scheduler=self.scheduler, scenario=self.scenario,
+            scheduler=self.scheduler, handler_mode=self.handler_mode,
+            scenario=self.scenario,
             wireless=self.wireless, compute=self.compute)
 
 
@@ -307,6 +314,8 @@ class MultiTaskEngine:
         ``FLEngine.run``: a second call picks up at the stop boundary and
         ``run(t)`` + ``run(T)`` matches ``run(T)`` bit-for-bit."""
         if self.cfg.scheduler == "batched":
+            if self.cfg.handler_mode == "wave":
+                return self._run_wave(time_budget, max_rounds, eval_every)
             return self._run_batched(time_budget, max_rounds, eval_every)
         return self._run_heap(time_budget, max_rounds, eval_every)
 
@@ -464,6 +473,208 @@ class MultiTaskEngine:
             spawned.clear()
             horizon[0] = (np.inf, np.inf)
         del self._push_free        # restore the heap-path instance method
+        return self._finish(now, time_budget)
+
+    # -- wave scheduler (handler_mode="wave") ------------------------------
+    def _run_wave(self, time_budget, max_rounds, eval_every):
+        """Task-id-aware wave loop: the single-task wave machinery
+        (``BatchedEngine._run_wave``) with the task column carried through.
+        Same-kind runs are selected exactly like the serial batched loop,
+        then partitioned per task id — unassigned requests (task=-1, and
+        requests whose job already finished) are routed through the
+        stateful assigner in event order first, so assignment decisions
+        match the serial loop; each per-task sub-wave then dispatches
+        through that runtime's ``_wave_requests`` / ``_wave_arrivals``.
+        Cross-task ordering *within* one run is relaxed (sub-waves run in
+        ascending task id, not interleaved event order) — task state is
+        disjoint per runtime, so only the shared RNG/scenario draw order
+        differs, which is already part of the wave contract.  A finished
+        job's in-flight arrivals are consumed and dropped, exactly like the
+        serial loops."""
+        table = self.devices.event_table()
+        n = self.cfg.n_devices
+        self._resume()
+        if not self._started:
+            if n:
+                table.time[:] = self.rng.uniform(0.0, 0.05, n)
+                table.seq[:] = np.arange(n)
+                table.kind[:] = KIND_IDS["request"]
+                table.task[:] = -1
+            self._seq = n
+            self.waiting = [_FifoWaiting() for _ in self.runtimes]
+            for rt in self.runtimes:
+                rt._log(0.0)
+                rt._started = True
+            self._started = True
+        # (time, seq, kind_id, device, task, payload, h)
+        spawned: List[Tuple] = []
+        horizon = [(np.inf, np.inf)]
+
+        def make_push(j):
+            def push(t, kind, k, payload=None, h=0):
+                table.put(k, t, self._seq, kind, payload, h, task=j)
+                if (t, self._seq) < horizon[0]:
+                    heapq.heappush(spawned, (t, self._seq, KIND_IDS[kind],
+                                             k, j, payload, h))
+                self._seq += 1
+            return push
+
+        def make_push_wave(j):
+            def push_wave(ts_w, ks_w, kind, payloads, h):
+                g = len(ks_w)
+                if not g:
+                    return
+                seqs = self._seq + np.arange(g)
+                self._seq += g
+                table.put_wave(ks_w, ts_w, seqs, kind, payloads, h, task=j)
+                kid = KIND_IDS[kind]
+                for w in np.flatnonzero(ts_w < horizon[0][0]).tolist():
+                    heapq.heappush(spawned, (
+                        float(ts_w[w]), int(seqs[w]), kid, int(ks_w[w]), j,
+                        None if payloads is None else payloads[w], int(h)))
+            return push_wave
+
+        pushers = [make_push(j) for j in range(len(self.runtimes))]
+        wavers = [make_push_wave(j) for j in range(len(self.runtimes))]
+        push_free = make_push(-1)
+        push_free_wave = make_push_wave(-1)
+        self._push_free = lambda t, kind, k: push_free(t, kind, k)
+
+        req_id, arr_id = KIND_IDS["request"], KIND_IDS["arrival"]
+        select_k = SCHEDULERS["batched"].SELECT_K
+        now = self._now
+        stop = False
+        while not stop:
+            sel = table.select_batch(select_k)
+            if not len(sel):
+                break
+            ts = table.time[sel]
+            ss = table.seq[sel]
+            kinds = table.kind[sel]
+            hs = table.h[sel]
+            tks = table.task[sel]
+            payloads = [table.payload[k] for k in sel.tolist()]
+            horizon[0] = (float(ts[-1]), int(ss[-1]))
+            bounds = np.flatnonzero(np.diff(kinds) != 0) + 1
+            i, m, b = 0, len(sel), 0
+            while i < m or spawned:
+                if not spawned:
+                    while b < len(bounds) and bounds[b] <= i:
+                        b += 1
+                    j_end = int(bounds[b]) if b < len(bounds) else m
+                    wts, wks = ts[i:j_end], sel[i:j_end]
+                    wtk, whs = tks[i:j_end], hs[i:j_end]
+                    wps = payloads[i:j_end]
+                    kid = int(kinds[i])
+                    i = j_end
+                else:
+                    rt_l: List[float] = []
+                    rk_l: List[int] = []
+                    rj_l: List[int] = []
+                    rp_l: List[Any] = []
+                    rh_l: List[int] = []
+                    kid = -1
+                    while True:
+                        if spawned and (i >= m or
+                                        (spawned[0][0], spawned[0][1])
+                                        < (ts[i], ss[i])):
+                            e = spawned[0]
+                            if kid < 0:
+                                kid = e[2]
+                            elif e[2] != kid:
+                                break
+                            heapq.heappop(spawned)
+                            rt_l.append(e[0])
+                            rk_l.append(e[3])
+                            rj_l.append(e[4])
+                            rp_l.append(e[5])
+                            rh_l.append(e[6])
+                        elif i < m:
+                            if kid < 0:
+                                kid = int(kinds[i])
+                            elif int(kinds[i]) != kid:
+                                break
+                            rt_l.append(float(ts[i]))
+                            rk_l.append(int(sel[i]))
+                            rj_l.append(int(tks[i]))
+                            rp_l.append(payloads[i])
+                            rh_l.append(int(hs[i]))
+                            i += 1
+                        else:
+                            break
+                    wts = np.asarray(rt_l, np.float64)
+                    wks = np.asarray(rk_l, np.int64)
+                    wtk = np.asarray(rj_l, np.int64)
+                    wps, whs = rp_l, np.asarray(rh_l, np.int64)
+                live = self._live(max_rounds)
+                if not live:
+                    stop = True
+                    break
+                # partial budget cut: keep draining — the prefix spawns
+                # re-requests still inside the budget, which serial order
+                # grants before stopping (see BatchedEngine._run_wave)
+                cut = int(np.searchsorted(wts, time_budget, side="right"))
+                if cut < len(wts):
+                    stop = True
+                    if not cut:
+                        break
+                    wts, wks, wtk = wts[:cut], wks[:cut], wtk[:cut]
+                    wps, whs = wps[:cut], whs[:cut]
+                table.clear_wave(wks)
+                if kid == req_id:
+                    wtk = np.asarray(wtk, np.int64).copy()
+                    for idx in range(len(wtk)):
+                        tj = int(wtk[idx])
+                        if tj < 0 or \
+                                self.runtimes[tj].server.t >= max_rounds:
+                            wtk[idx] = self.assigner.assign(int(wks[idx]),
+                                                            live)
+                    for tj in np.unique(wtk).tolist():
+                        s = wtk == tj
+                        self.runtimes[tj]._wave_requests(
+                            wts[s], wks[s], pushers[tj], wavers[tj],
+                            self.waiting[tj])
+                elif kid == arr_id:
+                    for tj in np.unique(wtk).tolist():
+                        rt = self.runtimes[tj]
+                        if rt.server.t >= max_rounds:
+                            continue     # consumed + dropped, like serial
+                        s = wtk == tj
+                        sub_ps = [p for p, mm in zip(wps, s.tolist()) if mm]
+                        if getattr(rt.strategy, "arrival_wave", False):
+                            rt._wave_arrivals(
+                                wts[s], wks[s], sub_ps, whs[s], eval_every,
+                                pushers[tj], wavers[tj], self.waiting[tj],
+                                push_wave_free=push_free_wave,
+                                max_rounds=max_rounds)
+                        else:
+                            sis = np.flatnonzero(s).tolist()
+                            for idx in sis:
+                                if rt.server.t >= max_rounds:
+                                    break
+                                self._on_arrival(
+                                    tj, float(wts[idx]), int(wks[idx]),
+                                    wps[idx], int(whs[idx]), eval_every,
+                                    pushers[tj], batched=True)
+                else:
+                    for idx in range(len(wks)):
+                        tj = int(wtk[idx])
+                        if self.runtimes[tj].server.t >= max_rounds:
+                            continue
+                        self.runtimes[tj]._handle_failure(
+                            float(wts[idx]), int(wks[idx]), wps[idx],
+                            pushers[tj], self.waiting[tj])
+                if not stop:
+                    now = float(wts[-1])
+            spawned.clear()
+            horizon[0] = (np.inf, np.inf)
+        if stop:
+            # resume cursor = earliest unprocessed event (serial loops
+            # break ON that event); empty slots hold +inf
+            rem = float(table.time.min()) if n else np.inf
+            if np.isfinite(rem):
+                now = rem
+        del self._push_free
         return self._finish(now, time_budget)
 
     # -- checkpoint/resume -------------------------------------------------

@@ -171,6 +171,14 @@ class CodecPolicy(abc.ABC):
         return resolve_codec(self.cfg.codec, p_s, p_q,
                              iters=self.cfg.cohort_channel_iters)
 
+    def codecs_for(self, t: int, device_ids, p_s: float,
+                   p_q: int) -> list:
+        """Vectorized :meth:`codec_for` over a grant wave.  Default: the
+        scalar hook per device (correct for any policy); subclasses whose
+        operating point depends on less than the full per-device context
+        override it to resolve once per distinct point."""
+        return [self.codec_for(t, int(k), p_s, p_q) for k in device_ids]
+
 
 class StaticPolicy(CodecPolicy):
     """The protocol's own global Alg. 5 point for every device — the
@@ -190,6 +198,11 @@ class StaticPolicy(CodecPolicy):
     def codec_for(self, t, device_id, p_s, p_q) -> Codec:
         return resolve_codec(self.cfg.codec, p_s, p_q,
                              iters=self.cfg.cohort_channel_iters)
+
+    def codecs_for(self, t, device_ids, p_s, p_q) -> list:
+        # one resolve, shared instance across the wave (codecs are frozen)
+        codec = self.codec_for(t, None, p_s, p_q)
+        return [codec] * len(device_ids)
 
 
 class TierAwarePolicy(CodecPolicy):
@@ -212,6 +225,30 @@ class TierAwarePolicy(CodecPolicy):
         b = max(ctx.bandwidth_scale, 1e-9)
         notches = max(0, int(round(np.log2(1.0 / b))))
         return notch_point(p_s, p_q, notches) if notches else (p_s, p_q)
+
+    def codecs_for(self, t, device_ids, p_s, p_q) -> list:
+        """The tier-aware point only reads the device's tier, so a wave
+        resolves once per *distinct tier present* instead of per device."""
+        if not (p_s < 1.0 or p_q < FLOAT_BITS):
+            codec = resolve_codec(self.cfg.codec, p_s, p_q,
+                                  iters=self.cfg.cohort_channel_iters)
+            return [codec] * len(device_ids)
+        ids = np.asarray(device_ids, np.int64)
+        known = (ids >= 0) & (ids < len(self.tier_of))
+        tiers = np.where(known,
+                         self.tier_of[np.clip(ids, 0,
+                                              len(self.tier_of) - 1)], 0)
+        out: list = [None] * len(ids)
+        for tier in np.unique(tiers).tolist():
+            ctx = DispatchContext(t, None, tier,
+                                  float(self.bandwidth_scale[tier]),
+                                  float(self.compute_scale[tier]), 0.0)
+            ps_t, pq_t = self.operating_point(ctx, p_s, p_q)
+            codec = resolve_codec(self.cfg.codec, ps_t, pq_t,
+                                  iters=self.cfg.cohort_channel_iters)
+            for i in np.flatnonzero(tiers == tier).tolist():
+                out[i] = codec
+        return out
 
 
 class StalenessAwarePolicy(CodecPolicy):

@@ -61,6 +61,12 @@ class ProtocolStrategy(abc.ABC):
 
     method: ClassVar[str] = ""
     event_driven: ClassVar[bool] = True
+    # True when on_arrivals fuses a whole arrival wave without needing the
+    # per-event round bookkeeping of the serial handler — the wave engine
+    # (SimConfig.handler_mode="wave") routes arrival runs through the fused
+    # path only for strategies that declare it; everyone else keeps the
+    # bit-faithful scalar fallback.
+    arrival_wave: ClassVar[bool] = False
 
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
@@ -98,7 +104,15 @@ class ProtocolStrategy(abc.ABC):
 
     def channels_for(self, t: int, device_ids) -> List[Codec]:
         """Batched grant hook: the wire codec for each device of a round-
-        ``t`` dispatch group.  Default: ``channel_for`` per device."""
+        ``t`` dispatch group.  When the strategy uses the stock
+        ``channel_for`` the group resolves through the policy's vectorized
+        ``codecs_for`` (one resolve per distinct operating point — what
+        makes million-device grant waves cheap); a strategy that overrides
+        ``channel_for`` for bespoke per-device behavior keeps the per-device
+        loop so its override still sees every dispatch."""
+        if type(self).channel_for is ProtocolStrategy.channel_for:
+            p_s, p_q = self.compression_at(t)
+            return self.policy.codecs_for(t, device_ids, p_s, p_q)
         return [self.channel_for(t, device_id=int(k)) for k in device_ids]
 
     def on_arrivals(self, engine, arrivals) -> List[bool]:
@@ -131,10 +145,25 @@ class TeaStrategy(ProtocolStrategy):
     """TEA-Fed: asynchronous cached aggregation, no wire compression."""
 
     method = "tea"
+    arrival_wave = True   # cache semantics fuse exactly (Alg. 2 is order-
+    # insensitive within a cache fill); see TeasqServer.receive_many
 
     def on_arrival(self, engine, now, k, payload, h) -> bool:
         w_local, n_k = engine.resolve_payload(payload)
         return engine.server.receive(w_local, h, n_k)
+
+    def on_arrivals(self, engine, arrivals) -> List[bool]:
+        """Fused Alg. 2 over an arrival group: resolve every payload, then
+        one ``receive_many`` pass with the stacked Eqs. 6-10 kernel per
+        cache fill.  Singletons and serial-mode runs keep the scalar hook
+        (``receive``'s sequential-sum aggregation — the pinned path)."""
+        if len(arrivals) <= 1 or engine.cfg.handler_mode != "wave":
+            return super().on_arrivals(engine, arrivals)
+        entries = []
+        for _now, _k, payload, h in arrivals:
+            w_local, n_k = engine.resolve_payload(payload)
+            entries.append((w_local, h, n_k))
+        return engine.server.receive_many(entries)
 
 
 class TeasStrategy(TeaStrategy):

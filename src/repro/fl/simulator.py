@@ -228,6 +228,19 @@ class SimConfig:
       padded cohort); the legacy ``FLSimulator`` ignores it.
     * ``cohort_channel_iters`` — threshold binary-search iterations of the
       in-graph channel the cohort path fuses.
+    * ``handler_mode`` — batched-scheduler-only event *processing* mode:
+      ``"serial"`` (default) falls each selected event through the scalar
+      ``FLEngine`` handlers — bit-identical to the heap scheduler and
+      pinned against ``tests/data/pinned_histories.json``.  ``"wave"``
+      processes maximal same-kind event runs as arrays (vectorized Alg. 1
+      admission gate, one ``DeviceRegistry.round_latency_batch`` draw per
+      grant wave, fused Eqs. 6-10 arrival aggregation) under a documented
+      *relaxed* parity contract: the same protocol decisions in the same
+      event order, but RNG draws batched per wave and assigned in
+      device-index order rather than heap-pop order, aggregation reduced
+      via a stacked kernel, and same-``now`` drains applied once per wave.
+      See the ``repro.fl.engine`` module docstring for the exact contract.
+      Requires ``scheduler="batched"``; the heap scheduler rejects it.
     * ``scenario`` — ``ScenarioConfig`` injection (dropout / transient
       failure / heterogeneity tiers); see its docstring for which backend
       consumes what.
@@ -263,6 +276,7 @@ class SimConfig:
     scheduler: str = "heap"
     cohort_size: int = 0
     cohort_channel_iters: int = 12   # threshold binary-search iterations
+    handler_mode: str = "serial"     # "serial" | "wave" (batched only)
     scenario: Optional[ScenarioConfig] = None
 
 
