@@ -33,6 +33,7 @@ import time
 
 from repro.core.codecs import CODECS
 from repro.core.dynamic import make_schedule
+from repro.core.server import SERVERS
 from repro.fl.fleet import ASSIGNERS, FleetConfig, build_fleet
 from repro.fl.policies import POLICIES
 from repro.fl.protocols import (best_acc_within, make_setup,
@@ -99,6 +100,15 @@ def main():
                          "documented relaxed parity, built for 10^6-device "
                          "fleets; requires --scheduler batched "
                          "(default: %(default)s)")
+    ap.add_argument("--server", choices=sorted(SERVERS), default="single",
+                    help="engine aggregation backend (SimConfig.server, "
+                         "repro.core.server.SERVERS): 'single' is the "
+                         "paper's one-host TeasqServer; 'sharded' runs the "
+                         "stacked Eqs. 6-10 cache reduction as a shard_map "
+                         "over the host device mesh (parity-pinned by "
+                         "tests/test_sharded_server.py; spread the mesh "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N) (default: %(default)s)")
     ap.add_argument("--task", choices=sorted(TASKS), default="fmnist_cnn",
                     help="model family to train (repro.fl.tasks.TASKS): the "
                          "paper's FMNIST CNN, a tiny transformer LM on a "
@@ -177,6 +187,7 @@ def main():
                           backend=args.backend, cohort_size=args.cohort,
                           scheduler=args.scheduler,
                           handler_mode=args.handler_mode,
+                          server=args.server,
                           codec=args.codec, task=args.task, **policy_kw,
                           **kw)
         best = max(h.accuracy for h in hist)

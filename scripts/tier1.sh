@@ -26,7 +26,16 @@
 #    Pallas, so CPU CI executes the exact kernel body that lowers to TPU
 #    pallas_call and pins it byte-identical to the host oracle stream;
 #    the hypothesis property suite in tests/test_fused_pack_properties.py
-#    and the pinned-history fused run stay tier-1-only) — <60 s total
+#    and the pinned-history fused run stay tier-1-only), the
+#    sharded-server smoke slice (tests/test_sharded_server.py — SERVERS
+#    registry/validation units plus a small stacked-vs-sharded kernel
+#    parity check; the mesh-width subprocess grid, the hypothesis
+#    property suite and the degenerate-mesh bit-identity re-pin stay
+#    tier-1-only), and the serve smoke slice (tests/test_serve.py —
+#    continuous-batcher-vs-solo-generate token parity, mid-flight
+#    admission, the checkpoint->serve roundtrip and the
+#    benchmarks/serve_bench.py harness smoke; slot recycling, MoE and
+#    the fleet-blob bridge stay tier-1-only) — <60 s total
 # 3. the docs check: tests/test_docs.py parses the fenced commands in
 #    README.md and docs/*.md and verifies every referenced file and flag
 #    exists (so the documentation front door cannot silently rot)

@@ -88,3 +88,43 @@ def load_blob(path: str) -> Any:
     with open(path, "rb") as f:
         return msgpack.unpackb(f.read(), object_hook=_decode, raw=False,
                                strict_map_key=False)
+
+
+def load_sim_params(path: str, like: Any, task: int = 0) -> Any:
+    """Global model weights out of a simulator checkpoint blob.
+
+    Accepts either an ``FLEngine.state_dict()`` blob (server weights under
+    ``core.server.w``) or a ``MultiTaskEngine.state_dict()`` blob (job
+    ``task``'s weights under ``tasks[task].server.w``).  The blobs store
+    the weight pytree as a flat leaf list in tree order, so ``like`` (a
+    pytree with the training-time structure, e.g. the task's
+    ``init_params`` output) supplies the treedef; per-leaf dtypes and
+    shapes are validated against it like :func:`load_pytree`."""
+    blob = load_blob(path)
+    if "core" in blob:                      # FLEngine.state_dict
+        leaves = blob["core"]["server"]["w"]
+    elif "tasks" in blob:                   # MultiTaskEngine.state_dict
+        jobs = blob["tasks"]
+        if not 0 <= task < len(jobs):
+            raise ValueError(f"fleet checkpoint at {path!r} holds "
+                             f"{len(jobs)} tasks; task index {task} is out "
+                             "of range")
+        leaves = jobs[task]["server"]["w"]
+    else:
+        raise ValueError(f"{path!r} is not an engine or fleet checkpoint "
+                         "blob (no 'core' or 'tasks' key)")
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat) != len(leaves):
+        raise ValueError(f"checkpoint at {path!r} holds {len(leaves)} "
+                         f"weight leaves, `like` has {len(flat)}")
+    restored = []
+    for i, (l, f) in enumerate(zip(leaves, flat)):
+        l, want = np.asarray(l), np.asarray(f)
+        if l.dtype != want.dtype:
+            raise ValueError(f"weight leaf {i} dtype mismatch at {path!r}: "
+                             f"stored {l.dtype}, expected {want.dtype}")
+        if l.shape != want.shape:
+            raise ValueError(f"weight leaf {i} shape mismatch at {path!r}: "
+                             f"stored {l.shape}, expected {want.shape}")
+        restored.append(jnp.asarray(l))
+    return jax.tree_util.tree_unflatten(treedef, restored)

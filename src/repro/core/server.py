@@ -3,15 +3,29 @@
 Distributor: admission-controls task requests with the C-fraction gate.
 Receiver/Updater: caches K = ceil(N*gamma) updates, then performs the
 staleness-weighted aggregation of Eqs. 6-10.
+
+``SERVERS`` registers the available server backends (the same
+one-subclass-plus-one-entry idiom as STRATEGIES / CODECS / SCHEDULERS):
+
+* ``"single"`` — :class:`TeasqServer`, the bit-pinned single-host
+  reference every history fixture was recorded against.
+* ``"sharded"`` — :class:`ShardedTeasqServer`, which partitions the
+  flattened weight vector across a 1-D device mesh (host devices under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and runs the
+  stacked Eqs. 6-10 reduction as a ``shard_map``; with one device it
+  degenerates to the parent's exact path.
+
+``SimConfig.server`` selects the backend; ``make_server`` resolves it.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.staleness import aggregate_cache, aggregate_cache_stacked
+from repro.core.staleness import (aggregate_cache, aggregate_cache_stacked,
+                                  make_sharded_aggregator)
 
 
 @dataclasses.dataclass
@@ -51,6 +65,18 @@ class TeasqServer:
         return self.w, self.t
 
     # -- Receiver + Updater (Alg. 2) ------------------------------------
+    def _aggregate(self) -> Any:
+        """Eqs. 6-10 over the full cache via the serial K-tuple kernel —
+        the bit-pinned reference path; subclasses may re-route."""
+        return aggregate_cache(self.w, self.cache, self.t,
+                               self.cfg.alpha, self.cfg.a)
+
+    def _aggregate_stacked(self) -> Any:
+        """Eqs. 6-10 via the stacked leading-axis kernel (wave mode's
+        relaxed-parity path); subclasses may re-route."""
+        return aggregate_cache_stacked(self.w, self.cache, self.t,
+                                       self.cfg.alpha, self.cfg.a)
+
     def receive(self, w_local: Any, h: int, n_samples: int) -> bool:
         """Push an update; aggregate when the cache reaches K.
         Returns True if an aggregation round completed."""
@@ -58,8 +84,7 @@ class TeasqServer:
         self.cache.append((w_local, h, n_samples))
         if len(self.cache) < self.cfg.cache_size:
             return False
-        self.w = aggregate_cache(self.w, self.cache, self.t,
-                                 self.cfg.alpha, self.cfg.a)
+        self.w = self._aggregate()
         self.cache.clear()
         self.t += 1
         return True
@@ -80,9 +105,78 @@ class TeasqServer:
             if len(self.cache) < self.cfg.cache_size:
                 done.append(False)
                 continue
-            self.w = aggregate_cache_stacked(self.w, self.cache, self.t,
-                                             self.cfg.alpha, self.cfg.a)
+            self.w = self._aggregate_stacked()
             self.cache.clear()
             self.t += 1
             done.append(True)
         return done
+
+
+class ShardedTeasqServer(TeasqServer):
+    """`TeasqServer` with the Eqs. 6-10 reduction sharded over a device
+    mesh (the "Sharded aggregation" ROADMAP tentpole).
+
+    The flattened weight vector is partitioned into equal column blocks
+    across a 1-D mesh of the first ``n_shards`` local jax devices (host
+    devices when the process runs under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), and both the
+    serial and the wave receive paths reduce through ONE
+    ``shard_map``-compiled flat kernel (``make_sharded_aggregator``).
+    Every shard computes the identical per-element program as the
+    single-host stacked kernel, so the sharded weights match
+    ``aggregate_cache_stacked`` to <= 1 ulp (tests/test_sharded_server.py
+    pins this across mesh sizes).
+
+    With ``n_shards`` resolving to 1 (the default single-device process)
+    no mesh is built and BOTH paths delegate to the parent's kernels
+    unchanged — the degenerate server is bit-identical to
+    :class:`TeasqServer`, so the pinned history fixtures stay valid under
+    ``SimConfig.server="sharded"`` on one device."""
+
+    def __init__(self, w_init: Any, cfg: ServerConfig, n_shards: int = 0):
+        super().__init__(w_init, cfg)
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        want = int(n_shards) if n_shards > 0 else len(devs)
+        self.n_shards = max(1, min(want, len(devs)))
+        self.mesh = None
+        self._agg = None
+        if self.n_shards > 1:
+            self.mesh = Mesh(np.asarray(devs[:self.n_shards]), ("agg",))
+            self._agg = make_sharded_aggregator(self.mesh)
+
+    def _aggregate(self) -> Any:
+        if self._agg is None:      # degenerate mesh: exact parent path
+            return super()._aggregate()
+        return self._agg(self.w, self.cache, self.t,
+                         self.cfg.alpha, self.cfg.a)
+
+    # one flat sharded kernel serves both receive paths: the stacked and
+    # the serial single-host kernels only differ in reduction order, and
+    # the sharded reduction already follows the stacked one
+    _aggregate_stacked = _aggregate
+
+
+# server registry: SimConfig.server -> class (the same
+# one-subclass-plus-one-entry idiom as STRATEGIES / CODECS / SCHEDULERS)
+SERVERS: Dict[str, type] = {
+    "single": TeasqServer,
+    "sharded": ShardedTeasqServer,
+}
+
+
+def make_server(name: str, w_init: Any, cfg: ServerConfig, *,
+                shards: int = 0) -> TeasqServer:
+    """Resolve ``SimConfig.server`` to a constructed server backend.
+    ``shards`` (``SimConfig.server_shards``) caps the mesh width for
+    sharded backends: 0 means "all local devices"."""
+    try:
+        cls = SERVERS[name]
+    except KeyError:
+        raise ValueError(f"unknown server {name!r}; "
+                         f"expected one of {sorted(SERVERS)}") from None
+    if issubclass(cls, ShardedTeasqServer):
+        return cls(w_init, cfg, n_shards=shards)
+    return cls(w_init, cfg)

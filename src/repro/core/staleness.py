@@ -110,3 +110,116 @@ def aggregate_cache_stacked(w_global: Any, cache: List[Tuple[Any, int, int]],
     n_samples = np.asarray([c[2] for c in cache], np.float32)
     return _aggregate_cache_stacked_jit(w_global, stacked, staleness,
                                         n_samples, alpha, a)
+
+
+# ----------------------------------------------------------------------
+# Sharded (mesh) variant: the stacked Eqs. 6-10 reduction partitioned over
+# a 1-D device mesh.  The weight pytree is flattened to ONE f32 vector and
+# split into equal column blocks (one per mesh device); each shard runs the
+# same per-element program as the single-host stacked kernel — the K-sized
+# tensordot reduction and the Eq. 10 merge touch each element exactly once,
+# with the identical per-element operand order — so the sharded result is
+# expected bit-identical to `_aggregate_cache_stacked_jit` (the mesh-parity
+# suite tests/test_sharded_server.py allows at most 1 ulp for XLA-version
+# slack in how the fused multiply-adds are grouped).
+# ----------------------------------------------------------------------
+def _flatten_f32(tree: Any) -> Tuple[np.ndarray, Tuple[Any, List[Tuple]]]:
+    """(flat f32 vector, (treedef, leaf shapes)) of a weight pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrs = [np.asarray(l, np.float32) for l in leaves]
+    vec = (np.concatenate([a.ravel() for a in arrs]) if arrs
+           else np.zeros(0, np.float32))
+    return vec, (treedef, [a.shape for a in arrs])
+
+
+def _unflatten_f32(vec: np.ndarray, spec) -> Any:
+    treedef, shapes = spec
+    out, o = [], 0
+    for sh in shapes:
+        n = int(np.prod(sh, dtype=np.int64))
+        out.append(np.asarray(vec[o:o + n]).reshape(sh))
+        o += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _sharded_agg_body(wg_loc, stacked_loc, staleness, n_samples, alpha, a):
+    """Per-shard flat Eqs. 6-10: ``wg_loc`` / ``stacked_loc`` carry one
+    column block of the flattened weights, the scalar inputs are
+    replicated.  Identical jnp ops to ``_aggregate_cache_stacked_jit``, so
+    every shard's weights/a_t match the single-host kernel's bit-for-bit."""
+    wts = stacked_staleness_weights(staleness, n_samples, a)
+    u_loc = jnp.tensordot(wts, stacked_loc, axes=1)
+    a_t = alpha * (jnp.mean(staleness) + 1.0) ** (-a)
+    return a_t * u_loc + (1.0 - a_t) * wg_loc
+
+
+def _flat_cache(w_global: Any, cache: List[Tuple[Any, int, int]], t: int,
+                n_shards: int):
+    """Host-side prep shared by the mesh and reference sharded paths:
+    flatten + zero-pad weights/stack to a multiple of ``n_shards``."""
+    wg, spec = _flatten_f32(w_global)
+    stk = np.stack([_flatten_f32(c[0])[0] for c in cache])
+    size = wg.size
+    pad = (-size) % n_shards
+    if pad:
+        wg = np.concatenate([wg, np.zeros(pad, np.float32)])
+        stk = np.concatenate(
+            [stk, np.zeros((len(cache), pad), np.float32)], axis=1)
+    staleness = np.asarray([t - c[1] for c in cache], np.float32)
+    n_samples = np.asarray([c[2] for c in cache], np.float32)
+    return wg, stk, staleness, n_samples, size, spec
+
+
+def make_sharded_aggregator(mesh):
+    """Compiled sharded aggregation over ``mesh``'s (single) axis.
+
+    Returns ``agg(w_global, cache, t, alpha, a) -> new w_global``, where
+    the flat Eqs. 6-10 body runs as a ``shard_map``: the weight vector and
+    the stacked cache's column axis are partitioned across the mesh
+    devices, the K-vector of staleness weights is computed replicated, and
+    each device reduces its own block.  Used by
+    ``repro.core.server.ShardedTeasqServer`` over a
+    ``--xla_force_host_platform_device_count`` host mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import shard_map
+
+    axis = mesh.axis_names[0]
+    m = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    body = shard_map(
+        _sharded_agg_body, mesh=mesh,
+        in_specs=(P(axis), P(None, axis), P(), P(), P(), P()),
+        out_specs=P(axis))
+    jitted = jax.jit(body)
+
+    def agg(w_global, cache, t, alpha, a=0.5):
+        wg, stk, staleness, n_samples, size, spec = _flat_cache(
+            w_global, cache, t, m)
+        out = np.asarray(jitted(wg, stk, staleness, n_samples,
+                                jnp.float32(alpha), jnp.float32(a)))
+        return _unflatten_f32(out[:size], spec)
+
+    return agg
+
+
+_sharded_body_jit = jax.jit(_sharded_agg_body)
+
+
+def aggregate_cache_sharded_ref(w_global: Any,
+                                cache: List[Tuple[Any, int, int]], t: int,
+                                alpha: float, a: float = 0.5,
+                                n_shards: int = 2) -> Any:
+    """Mesh-free replay of the sharded reduction: the same flat split into
+    ``n_shards`` column blocks, each reduced by the same per-shard body on
+    the default device.  tests/test_sharded_server.py property-checks this
+    chunked reduction against the single-host kernels in-process (no
+    multi-device subprocess needed), and the subprocess mesh tests pin the
+    real ``shard_map`` against it."""
+    wg, stk, staleness, n_samples, size, spec = _flat_cache(
+        w_global, cache, t, n_shards)
+    block = wg.size // n_shards
+    outs = [np.asarray(_sharded_body_jit(
+        wg[s * block:(s + 1) * block], stk[:, s * block:(s + 1) * block],
+        staleness, n_samples, jnp.float32(alpha), jnp.float32(a)))
+        for s in range(n_shards)]
+    return _unflatten_f32(np.concatenate(outs)[:size], spec)

@@ -71,7 +71,7 @@ from repro.core.codecs import Codec, IdentityCodec, ThresholdGraphCodec
 from repro.core.latency import (comm_latency, comm_latency_batch,
                                 device_rates, sample_compute_latency,
                                 sample_compute_latency_batch)
-from repro.core.server import ServerConfig, TeasqServer
+from repro.core.server import ServerConfig, TeasqServer, make_server
 from repro.fl.simulator import (LogEntry, ScenarioConfig, SimConfig,
                                 tier_assignment)
 from repro.fl.tasks import get_task
@@ -658,8 +658,9 @@ class FLEngine:
         self.part_sizes = np.asarray([len(p) for p in partitions], np.int64)
         self.devices = (DeviceRegistry(cfg, self.rng) if devices is None
                         else devices)
-        self.server = TeasqServer(w_init, ServerConfig(
-            n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a))
+        self.server = make_server(cfg.server, w_init, ServerConfig(
+            n, cfg.c_fraction, cfg.gamma, cfg.alpha, cfg.a),
+            shards=cfg.server_shards)
         self.channel = ChannelMeter()
         self.prev_local: Dict[int, Any] = {}      # MOON per-device state
         self.task = get_task(cfg.task)

@@ -241,6 +241,17 @@ class SimConfig:
       via a stacked kernel, and same-``now`` drains applied once per wave.
       See the ``repro.fl.engine`` module docstring for the exact contract.
       Requires ``scheduler="batched"``; the heap scheduler rejects it.
+    * ``server`` — engine-only server backend from
+      ``repro.core.server.SERVERS``: ``"single"`` (default —
+      ``TeasqServer``, the bit-pinned single-host reference) or
+      ``"sharded"`` (``ShardedTeasqServer`` — the Eqs. 6-10 cache
+      reduction runs as a ``shard_map`` over a 1-D mesh of local devices,
+      e.g. host devices under
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; on a
+      single-device process it degenerates to the exact ``"single"``
+      path).  The legacy ``FLSimulator`` ignores it.
+    * ``server_shards`` — mesh width cap for ``server="sharded"``
+      (0 = use every local device).
     * ``scenario`` — ``ScenarioConfig`` injection (dropout / transient
       failure / heterogeneity tiers); see its docstring for which backend
       consumes what.
@@ -277,6 +288,8 @@ class SimConfig:
     cohort_size: int = 0
     cohort_channel_iters: int = 12   # threshold binary-search iterations
     handler_mode: str = "serial"     # "serial" | "wave" (batched only)
+    server: str = "single"           # repro.core.server.SERVERS backend
+    server_shards: int = 0           # sharded-server mesh width (0 = all)
     scenario: Optional[ScenarioConfig] = None
 
 

@@ -71,6 +71,11 @@ class FLTask:
     make_data: Callable[[int, int, int], Dict[str, np.ndarray]]
     forward: Optional[Callable[[Any, jax.Array], jax.Array]] = None
     features: Optional[Callable[[Any, jax.Array], jax.Array]] = None
+    # the transformer-stack ModelConfig behind an LM task, when there is
+    # one: the FL->serve bridge (repro.launch.serve --from-sim) needs the
+    # config to rebuild the weight treedef and drive prefill/decode_step.
+    # None for non-LM families (CNN/MLP) — those are not servable LMs.
+    model_cfg: Optional[ModelConfig] = None
 
 
 TASKS: Dict[str, FLTask] = {}
@@ -206,6 +211,7 @@ register_task(FLTask(
     make_data=make_lm_data,
     forward=lm_forward,
     features=None,            # no contrastive head: MOON is CNN/MLP-only
+    model_cfg=_LM_CFG,
 ))
 
 
@@ -280,6 +286,7 @@ register_task(FLTask(
     make_data=make_lm_data,
     forward=_moe_fwd,
     features=None,
+    model_cfg=_MOE_LM_CFG,
 ))
 
 register_task(FLTask(
@@ -291,4 +298,5 @@ register_task(FLTask(
     make_data=make_lm_data,
     forward=_ssm_fwd,
     features=None,
+    model_cfg=_SSM_LM_CFG,
 ))

@@ -39,11 +39,13 @@ import dataclasses
 import functools
 import json
 
-from conftest import (PINNED_PATH, TINY_SETUP, assert_histories_equal,
-                      run_tiny)
+from conftest import (PINNED_PATH, TINY_SETUP, assert_engine_state_equal,
+                      assert_histories_equal, run_tiny)
+import jax
 import numpy as np
 import pytest
 
+from repro.checkpoint.io import load_blob, save_blob
 from repro.core.compression import expected_pytree_wire_bytes
 from repro.core.latency import ComputeConfig, WirelessConfig
 from repro.data.synthetic import partition_iid
@@ -482,3 +484,159 @@ def test_wave_million_device_stress():
     assert sum(ch.tier_up.values()) == ch.bytes_up
     for tier_bytes in ch.tier_down.values():
         assert tier_bytes % per_task == 0
+
+
+# ----------------------------------------------------------------------
+# wave resume parity: save-at-t equals the uninterrupted wave run
+# ----------------------------------------------------------------------
+# Two layers, on the zero-noise fleets of the exact-parity section
+# (``ComputeConfig(phi=inf)``: every latency draw is exactly 0.0 regardless
+# of assignment order):
+#
+# 1. **The checkpoint pin proper — bit-exact.**  Restoring the blob saved
+#    at the cut must be indistinguishable from never having serialized:
+#    the restored engine replays the same engine *continued past the save*
+#    bit-for-bit — full histories, channel meters, stats, the
+#    pending-event multiset, and the server weights to the last bit.
+#
+# 2. **The cut itself, vs the uninterrupted run — relaxed.**  A budget cut
+#    splits waves, and a wave handles its whole same-kind span before
+#    events spawned inside it (the post-wave-state regrouping documented
+#    on ``BatchedEngine``), so processing order near the cut regroups:
+#    arrivals moved across a cache-fill boundary land in a neighboring
+#    round, shifting mid-run round instants, intermediate cumulative byte
+#    columns (bytes are metered at dispatch) and the exact model values.
+#    Under zero noise the event frontier re-synchronizes after the cut, so
+#    the single-job runs land exactly on everything *except* model values:
+#    round sequence, final-row time/round/bytes, meters, pending multiset
+#    and the server state machine are equal, while weights compare
+#    allclose (the regrouped Eqs. 6-10 reduction mixes the same updates
+#    into adjacent rounds; the gamma-mixing decay bounds the drift) and
+#    the final accuracy within 0.05.  A multi-job fleet can additionally
+#    shift one round completion across the final budget boundary, so the
+#    fleet's uninterrupted comparison allows a +-1 round skew and a small
+#    relative byte skew.
+
+def _server_state_machine(srv):
+    return (srv.t, srv.active, len(srv.cache))
+
+
+def _assert_server_close(srv_a, srv_b, atol=0.2):
+    assert _server_state_machine(srv_a) == _server_state_machine(srv_b)
+    for la, lb in zip(jax.tree.leaves(srv_a.w), jax.tree.leaves(srv_b.w)):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.shape == lb.shape and np.all(np.isfinite(lb))
+        np.testing.assert_allclose(la, lb, rtol=0, atol=atol)
+
+
+def _assert_resume_bit_exact(h_cont, h_res, eng_cont, eng_res):
+    """Layer 1: the restored engine vs the never-serialized continuation."""
+    assert_histories_equal(h_cont, h_res)
+    assert_engine_state_equal(eng_cont, eng_res)
+    assert _server_state_machine(eng_cont.server) == \
+        _server_state_machine(eng_res.server)
+    for la, lb in zip(jax.tree.leaves(eng_cont.server.w),
+                      jax.tree.leaves(eng_res.server.w)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_wave_cut_relaxed(h_full, h_res):
+    """Layer 2 history contract: same round sequence, final row exact
+    except the accuracy of the (allclose-only) weights."""
+    assert len(h_full) == len(h_res)
+    assert [a.round for a in h_full] == [b.round for b in h_res]
+    a, b = h_full[-1], h_res[-1]
+    assert (a.time, a.round) == (b.time, b.round)
+    assert abs(a.accuracy - b.accuracy) <= 0.05
+    assert (a.bytes_up, a.bytes_down,
+            a.max_model_bytes_up, a.max_model_bytes_down) == \
+           (b.bytes_up, b.bytes_down,
+            b.max_model_bytes_up, b.max_model_bytes_down)
+
+
+def _wave_resume_cfg(n, method, cohort, seed):
+    return SimConfig(method=method, task="fmnist_cnn", n_devices=n,
+                     c_fraction=1.0, gamma=0.25, epochs=1, batch_size=8,
+                     p_s=0.25, p_q=8, seed=seed, cohort_size=cohort,
+                     cohort_channel_iters=6, scheduler="batched",
+                     handler_mode="wave",
+                     compute=ComputeConfig(phi=float("inf")))
+
+
+@pytest.mark.parametrize("method,cohort", [("teasq", 0), ("teasq", 3),
+                                           ("fedasync", 0)])
+def test_wave_engine_resume_parity(method, cohort, tmp_path):
+    """Wave mode run(2) -> state_dict -> save_blob -> load -> run(4):
+    bit-identical to the same engine continued past the save (layer 1),
+    and equal to the uninterrupted wave run(4) on round sequence, final
+    row, meters/stats, pending-event multiset and the server state
+    machine, with allclose weights (layer 2 — see the section comment).
+    The resume pin PR 9's wave handlers owed."""
+    n = 8
+    data, parts, w0 = _wave_setup(n, 0)
+    cfg = _wave_resume_cfg(n, method, cohort, seed=0)
+    full = make_sim(data, parts, w0, cfg)
+    h_full = full.run(time_budget=4.0, eval_every=1)
+    a = make_sim(data, parts, w0, cfg)
+    a.run(time_budget=2.0, eval_every=1)
+    path = str(tmp_path / "wave_engine.msgpack")
+    save_blob(path, a.state_dict())
+    b = make_sim(data, parts, w0, cfg)
+    b.load_state(load_blob(path))
+    h_res = b.run(time_budget=4.0, eval_every=1)
+    h_cont = a.run(time_budget=4.0, eval_every=1)   # never serialized
+    assert h_full[-1].round >= 1          # the run did aggregate
+    _assert_resume_bit_exact(h_cont, h_res, a, b)
+    assert _pending_events(a) == _pending_events(b)
+    _assert_wave_cut_relaxed(h_full, h_res)
+    assert_engine_state_equal(full, b)
+    assert _pending_events(full) == _pending_events(b)
+    _assert_server_close(full.server, b.server)
+
+
+def test_wave_fleet_resume_parity(tmp_path):
+    """The fleet analog: restoring a two-job wave fleet's blob replays
+    the continued fleet bit-for-bit per task (layer 1); vs the
+    uninterrupted fleet the comparison additionally tolerates one round
+    completion shifted across the final budget boundary (layer 2 — the
+    regrouped instants can move a completion past the budget, taking its
+    eval row, round count and dispatch bytes with it)."""
+    n = 12
+    data, parts, w0 = _wave_setup(n, 1)
+
+    def fresh():
+        specs = [_wave_resume_cfg(n, "teasq", 0, seed=1),
+                 _wave_resume_cfg(n, "fedasync", 3, seed=1)]
+        return MultiTaskEngine([data, data], [parts, parts], [w0, w0],
+                               FleetConfig(tasks=specs, n_devices=n,
+                                           seed=1, scheduler="batched",
+                                           handler_mode="wave",
+                                           compute=ComputeConfig(
+                                               phi=float("inf"))))
+
+    full = fresh()
+    h_full = full.run(time_budget=3.0, eval_every=1)
+    a = fresh()
+    a.run(time_budget=1.5, eval_every=1)
+    path = str(tmp_path / "wave_fleet.msgpack")
+    save_blob(path, a.state_dict())
+    b = fresh()
+    b.load_state(load_blob(path))
+    h_res = b.run(time_budget=3.0, eval_every=1)
+    h_cont = a.run(time_budget=3.0, eval_every=1)   # never serialized
+    assert any(h[-1].round >= 1 for h in h_full)
+    for h_c, h_r, rt_c, rt_r in zip(h_cont, h_res, a.runtimes, b.runtimes):
+        _assert_resume_bit_exact(h_c, h_r, rt_c, rt_r)
+    assert _pending_events(a) == _pending_events(b)
+    for h_f, h_r, rt_f, rt_r in zip(h_full, h_res, full.runtimes,
+                                    b.runtimes):
+        assert abs(len(h_f) - len(h_r)) <= 1
+        assert abs(rt_f.server.t - rt_r.server.t) <= 1
+        assert abs(h_f[-1].accuracy - h_r[-1].accuracy) <= 0.05
+        up_f, up_r = h_f[-1].bytes_up, h_r[-1].bytes_up
+        assert abs(up_f - up_r) <= 0.05 * max(up_f, up_r)
+        for la, lb in zip(jax.tree.leaves(rt_f.server.w),
+                          jax.tree.leaves(rt_r.server.w)):
+            la, lb = np.asarray(la), np.asarray(lb)
+            assert la.shape == lb.shape and np.all(np.isfinite(lb))
+            np.testing.assert_allclose(la, lb, rtol=0, atol=0.2)
